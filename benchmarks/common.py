@@ -1,0 +1,73 @@
+"""Shared benchmark utilities: timing, memory accounting, CSV emit.
+
+Wall-clock rows compare the interpreted numpy implementations (the paper's
+"Py" column analogue) against the jitted XLA ones (the "C" column analogue) on
+this host.  Memory rows are *live decoder-state bytes* from the documented
+analytic formulas — the quantity the paper's Fig. 1/7/9 track — because RSS on
+a JIT runtime measures the allocator, not the algorithm.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+
+def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall seconds; blocks on jax outputs."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def timeit_np(fn, *args, repeats: int = 1) -> float:
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn(*args)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def decoder_state_bytes(method: str, K: int, T: int, P: int = 8,
+                        B: int = 128) -> int:
+    """Live DP-state bytes per the complexity table (paper Fig. 1).
+
+    4-byte scores + 4-byte indices; FLASH tracks (OptProb, PreState-equivalent,
+    MidState/DivState); beams track (score, state, mid) per slot.
+    """
+    if method == "vanilla":
+        return K * T * 4 + K * 8                 # psi table + delta
+    if method == "checkpoint":
+        c = int(np.ceil(np.sqrt(T)))
+        return K * c * 4 + K * c * 4 + K * 8     # checkpoints + segment psis
+    if method in ("sieve", "sieve_mp"):
+        return K * 12                            # delta + mid + entry vector
+    if method == "flash":
+        return P * K * 12 + (P - 1) * K * 4      # P lanes + DivState
+    if method == "flash_bs":
+        return P * B * 12 + (P - 1) * B * 4
+    if method == "beam_static":
+        return K * 4 + T * B * 8                 # full-K transient + survivors
+    if method == "beam_static_mp":
+        return K * 4 + P * B * 12                # full-K transient per step
+    if method == "assoc":
+        return T * K * K * 4
+    raise ValueError(method)
+
+
+def emit(name: str, seconds: float, derived: str = ""):
+    """CSV row: name,us_per_call,derived."""
+    print(f"{name},{seconds * 1e6:.1f},{derived}")
+
+
+__all__ = ["timeit", "timeit_np", "decoder_state_bytes", "emit"]

@@ -1,0 +1,41 @@
+"""Fig. 10 / Table II analogue: the hardware-acceleration story on TPU.
+
+No TPU is attached, so this reports (a) interpret-mode correctness timing is
+meaningless and therefore *excluded*; (b) the structural metrics that
+determine the speedup on hardware: HBM round-trips per DP step removed by the
+fused kernel, VMEM residency, and the modeled v5e step time for the XLA scan
+path vs the fused Pallas path (both from the documented bandwidth/flops
+model).  The paper's Table II resource table maps to the kernel's VMEM
+budget accounting."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit
+
+HBM_BW = 819e9
+PEAK = 197e12 / 2   # tropical ops run on the VPU at ~fp32 vector rate proxy
+
+
+def run(full: bool = False):
+    T = 512
+    for K in (128, 256, 512, 1024, 2048):
+        a_bytes = K * K * 4
+        # XLA scan path: per step, read A + delta + em, write delta + psi
+        xla_bytes_step = a_bytes + 3 * K * 4 + K * 4
+        # fused kernel: A resident in VMEM; per step stream em in, psi out
+        pallas_bytes_step = K * 4 + K * 4
+        flops_step = 2 * K * K
+        t_xla = max(xla_bytes_step / HBM_BW, flops_step / PEAK) * T
+        t_pal = max(pallas_bytes_step / HBM_BW, flops_step / PEAK) * T
+        fits = "vmem_ok" if a_bytes <= 12 * 2**20 else "vmem_spill"
+        emit(f"fig10/K{K}/xla_scan_model", t_xla,
+             f"bytes_per_step={xla_bytes_step}")
+        emit(f"fig10/K{K}/pallas_fused_model", t_pal,
+             f"bytes_per_step={pallas_bytes_step};{fits};"
+             f"speedup={t_xla / t_pal:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

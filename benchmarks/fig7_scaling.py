@@ -1,0 +1,49 @@
+"""Fig. 7 analogue: decoding time & live state bytes vs state-space size K and
+sequence length T, with FLASH at parallelism 2/7/16."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core import (erdos_renyi_hmm, random_emissions, viterbi_vanilla,
+                        viterbi_checkpoint, flash_viterbi, flash_bs_viterbi)
+from .common import timeit, decoder_state_bytes, emit
+
+
+def run(full: bool = False):
+    Ks = [64, 128, 256] + ([512, 1024] if full else [])
+    Ts = [64, 128, 256] + ([512, 1024] if full else [])
+    key = jax.random.key(1)
+
+    for K in Ks:
+        k1, k2, key = jax.random.split(key, 3)
+        hmm = erdos_renyi_hmm(k1, K)
+        em = random_emissions(k2, 256, K)
+        for name, fn, mm, kw in [
+            ("vanilla", viterbi_vanilla, "vanilla", {}),
+            ("checkpoint", viterbi_checkpoint, "checkpoint", {}),
+            ("flash_P2", lambda a, b, c: flash_viterbi(a, b, c, parallelism=2), "flash", {"P": 2}),
+            ("flash_P7", lambda a, b, c: flash_viterbi(a, b, c, parallelism=7), "flash", {"P": 7}),
+            ("flash_P16", lambda a, b, c: flash_viterbi(a, b, c, parallelism=16), "flash", {"P": 16}),
+            ("flash_bs_P7", lambda a, b, c: flash_bs_viterbi(a, b, c, beam_width=min(128, K), parallelism=7), "flash_bs", {"P": 7, "B": min(128, K)}),
+        ]:
+            t = timeit(fn, hmm.log_pi, hmm.log_A, em, repeats=2)
+            emit(f"fig7/K{K}/{name}", t,
+                 f"state_bytes={decoder_state_bytes(mm, K, 256, **kw)}")
+
+    for T in Ts:
+        k1, k2, key = jax.random.split(key, 3)
+        hmm = erdos_renyi_hmm(k1, 256)
+        em = random_emissions(k2, T, 256)
+        for name, fn, mm, kw in [
+            ("vanilla", viterbi_vanilla, "vanilla", {}),
+            ("flash_P7", lambda a, b, c: flash_viterbi(a, b, c, parallelism=7), "flash", {"P": 7}),
+            ("flash_bs_P7", lambda a, b, c: flash_bs_viterbi(a, b, c, beam_width=128, parallelism=7), "flash_bs", {"P": 7, "B": 128}),
+        ]:
+            t = timeit(fn, hmm.log_pi, hmm.log_A, em, repeats=2)
+            emit(f"fig7/T{T}/{name}", t,
+                 f"state_bytes={decoder_state_bytes(mm, 256, T, **kw)}")
+
+
+if __name__ == "__main__":
+    run()

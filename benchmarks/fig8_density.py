@@ -1,0 +1,39 @@
+"""Fig. 8 analogue: decoding time vs transition-graph edge probability p.
+FLASH variants use the dense state-matrix formulation, so their runtime should
+be flat in p (the paper's robustness claim vs token-passing baselines)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import erdos_renyi_hmm, random_emissions, flash_viterbi, \
+    flash_bs_viterbi, viterbi_vanilla
+from .common import timeit, emit
+
+
+def run(full: bool = False):
+    ps = [0.05, 0.113, 0.253, 0.57, 1.0] if not full else \
+        [0.05, 0.075, 0.113, 0.169, 0.253, 0.38, 0.57, 0.85, 1.0]
+    key = jax.random.key(2)
+    times = {}
+    for p in ps:
+        k1, k2, key = jax.random.split(key, 3)
+        hmm = erdos_renyi_hmm(k1, 256, edge_prob=p)
+        em = random_emissions(k2, 256, 256)
+        for name, fn in [
+            ("vanilla", viterbi_vanilla),
+            ("flash_P7", lambda a, b, c: flash_viterbi(a, b, c, parallelism=7)),
+            ("flash_bs_P7", lambda a, b, c: flash_bs_viterbi(
+                a, b, c, beam_width=128, parallelism=7)),
+        ]:
+            t = timeit(fn, hmm.log_pi, hmm.log_A, em, repeats=2)
+            times.setdefault(name, []).append(t)
+            emit(f"fig8/p{p}/{name}", t)
+    for name, ts in times.items():
+        cv = float(np.std(ts) / np.mean(ts))
+        emit(f"fig8/{name}_cv_over_p", float(np.mean(ts)), f"cv={cv:.3f}")
+
+
+if __name__ == "__main__":
+    run()

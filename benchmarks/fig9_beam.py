@@ -1,0 +1,39 @@
+"""Fig. 9 analogue: beam width vs time, live state bytes, and relative error
+(eta = |l_opt - l| / |l_opt|) on a forced-alignment-style workload."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import (left_to_right_hmm, random_emissions, viterbi_vanilla,
+                        flash_bs_viterbi, relative_error, path_score)
+from .common import timeit, decoder_state_bytes, emit
+
+
+def run(full: bool = False):
+    K = 1024 if full else 512
+    T = 256
+    key = jax.random.key(3)
+    k1, k2 = jax.random.split(key)
+    hmm = left_to_right_hmm(k1, K, 64)
+    em = random_emissions(k2, T, K)
+    _, opt = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+
+    widths = [32, 64, 128, 256, 512] + ([1024] if full else [])
+    for B in widths:
+        B = min(B, K)
+        t = timeit(lambda: flash_bs_viterbi(hmm.log_pi, hmm.log_A, em,
+                                            beam_width=B, parallelism=7),
+                   repeats=2)
+        path, _ = flash_bs_viterbi(hmm.log_pi, hmm.log_A, em, beam_width=B,
+                                   parallelism=7)
+        ll = path_score(hmm.log_pi, hmm.log_A, em, path)
+        eta = float(relative_error(opt, ll))
+        emit(f"fig9/B{B}", t,
+             f"state_bytes={decoder_state_bytes('flash_bs', K, T, P=7, B=B)};"
+             f"rel_err={eta:.2e}")
+
+
+if __name__ == "__main__":
+    run()

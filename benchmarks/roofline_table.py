@@ -1,0 +1,26 @@
+"""Render the dry-run roofline table (reads dryrun_results.jsonl)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import emit
+
+
+def run(full: bool = False, path: str = "dryrun_results.jsonl"):
+    if not os.path.exists(path):
+        emit("roofline/missing", 0, f"run repro.launch.dryrun first ({path})")
+        return
+    rows = [json.loads(l) for l in open(path)]
+    for r in rows:
+        if r.get("status") != "ok":
+            continue
+        emit(f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}",
+             max(r["compute_s"], r["memory_s"], r["collective_s"]),
+             f"dominant={r['dominant']};useful={r['useful_ratio']:.3f};"
+             f"frac={r['roofline_fraction']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

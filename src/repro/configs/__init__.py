@@ -1,0 +1,31 @@
+"""Assigned architecture configs (one module per arch) + paper HMM workloads.
+
+ARCHS maps the assignment id to its config module; each module exposes
+CONFIG, SMOKE, SKIPS and input_specs(shape, multi_pod).
+"""
+
+import importlib
+
+ARCH_IDS = [
+    "recurrentgemma_2b",
+    "deepseek_v2_236b",
+    "moonshot_v1_16b_a3b",
+    "tinyllama_1_1b",
+    "h2o_danube_3_4b",
+    "granite_8b",
+    "gemma_2b",
+    "xlstm_350m",
+    "hubert_xlarge",
+    "llava_next_34b",
+]
+
+
+def get_arch(arch_id: str):
+    """Return the config module for an assignment id (dashes tolerated)."""
+    mod = arch_id.replace("-", "_").replace(".", "_")
+    if mod not in ARCH_IDS:
+        raise ValueError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    return importlib.import_module(f"repro.configs.{mod}")
+
+
+__all__ = ["ARCH_IDS", "get_arch"]

@@ -1,0 +1,150 @@
+"""Shared shape/spec machinery for the assigned architecture configs.
+
+Every arch module exposes:
+    CONFIG  -- the exact published configuration (ModelConfig)
+    SMOKE   -- a reduced same-family config for CPU smoke tests
+    SKIPS   -- {shape_name: reason} cells excluded per the assignment rules
+    input_specs(shape, multi_pod) -> InputSpec | None  (None = skipped cell)
+
+The four LM shapes (seq_len x global_batch):
+    train_4k     4,096 x 256   -> train_step
+    prefill_32k  32,768 x 32   -> prefill
+    decode_32k   32,768 x 128  -> serve_step (1 new token, 32k KV cache)
+    long_500k    524,288 x 1   -> serve_step (1 new token, 500k context)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import build_model
+from repro.models.transformer import ModelConfig
+
+SHAPES: dict[str, tuple[str, int, int]] = {
+    "train_4k": ("train", 4_096, 256),
+    "prefill_32k": ("prefill", 32_768, 32),
+    "decode_32k": ("decode", 32_768, 128),
+    "long_500k": ("decode", 524_288, 1),
+}
+
+
+@dataclasses.dataclass
+class InputSpec:
+    """Abstract inputs for one dry-run cell."""
+    kind: str                      # train | prefill | decode
+    seq_len: int
+    batch: int
+    args: dict                     # name -> ShapeDtypeStruct pytree
+    shardings: dict                # name -> PartitionSpec pytree (same struct)
+
+
+def _batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def lm_input_specs(cfg: ModelConfig, shape: str, multi_pod: bool = False,
+                   skips: dict[str, str] | None = None) -> InputSpec | None:
+    """Generic LM input specs; arch modules wrap this with their overrides."""
+    if skips and shape in skips:
+        return None
+    kind, S, B = SHAPES[shape]
+    ba = _batch_axes(multi_pod)
+    i32, f_act = jnp.int32, cfg.dtype
+
+    if kind == "train":
+        args = {"batch": {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }}
+        sh = {"batch": {
+            "tokens": P(ba, None), "labels": P(ba, None), "mask": P(ba, None)}}
+        return InputSpec(kind, S, B, args, sh)
+
+    if kind == "prefill":
+        args = {"batch": {"tokens": jax.ShapeDtypeStruct((B, S), i32)}}
+        sh = {"batch": {"tokens": P(ba, None)}}
+        return InputSpec(kind, S, B, args, sh)
+
+    # decode: one new token against a cache of length S
+    model = build_model(cfg)
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    from repro.sharding.rules import MULTI_POD_RULES, SINGLE_POD_RULES
+    rules = MULTI_POD_RULES if multi_pod else SINGLE_POD_RULES
+    if B == 1:  # long-context single-stream: batch cannot shard; replicate
+        import copy
+        rules = dataclasses.replace(rules, rules={**rules.rules, "batch": None})
+    cache_specs = model.cache_specs(rules)
+    args = {"tokens": jax.ShapeDtypeStruct((B, 1), i32), "cache": cache}
+    sh = {"tokens": P(rules.axis("batch"), None), "cache": cache_specs}
+    return InputSpec(kind, S, B, args, sh)
+
+
+def embeds_input_specs(cfg: ModelConfig, shape: str, multi_pod: bool = False,
+                       skips: dict[str, str] | None = None,
+                       num_image_tokens: int = 0) -> InputSpec | None:
+    """Variant for modality-frontend-stub archs (audio frames / vision patches).
+
+    For encoder (hubert): batch supplies precomputed frame embeddings.
+    For VLM (llava): text tokens + patch embeddings; seq_len counts both.
+    """
+    if skips and shape in skips:
+        return None
+    kind, S, B = SHAPES[shape]
+    ba = _batch_axes(multi_pod)
+    f_act = cfg.dtype
+
+    if num_image_tokens:  # VLM: tokens + image embeds
+        base = lm_input_specs(cfg, shape, multi_pod, skips)
+        if base is None or kind == "decode":
+            return base
+        S_text = S - num_image_tokens
+        img = jax.ShapeDtypeStruct((B, num_image_tokens, cfg.d_model), f_act)
+        base.args["batch"]["tokens"] = jax.ShapeDtypeStruct((B, S_text), jnp.int32)
+        base.args["batch"]["image_embeds"] = img
+        base.shardings["batch"]["image_embeds"] = P(ba, None, None)
+        return base
+
+    # encoder (audio): embeds in, masked-prediction labels for train
+    if kind == "train":
+        args = {"batch": {
+            "embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f_act),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((B, S), jnp.float32),
+        }}
+        sh = {"batch": {"embeds": P(ba, None, None), "labels": P(ba, None),
+                        "mask": P(ba, None)}}
+        return InputSpec(kind, S, B, args, sh)
+    if kind == "prefill":
+        args = {"batch": {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), f_act)}}
+        sh = {"batch": {"embeds": P(ba, None, None)}}
+        return InputSpec(kind, S, B, args, sh)
+    return None  # encoder-only: no decode cells
+
+
+def smoke_batch(cfg: ModelConfig, key, batch: int = 2, seq: int = 16,
+                num_image_tokens: int = 0, embeds: bool = False):
+    """Concrete tiny batch for the per-arch smoke tests."""
+    kt, kl, ke = jax.random.split(key, 3)
+    if embeds:
+        return {"embeds": jax.random.normal(ke, (batch, seq, cfg.d_model),
+                                            cfg.dtype),
+                "labels": jax.random.randint(kl, (batch, seq), 0, cfg.vocab),
+                "mask": jnp.ones((batch, seq), jnp.float32)}
+    b = {"tokens": jax.random.randint(kt, (batch, seq - num_image_tokens), 0,
+                                      cfg.vocab),
+         "labels": jax.random.randint(kl, (batch, seq), 0, cfg.vocab),
+         "mask": jnp.ones((batch, seq), jnp.float32)}
+    if num_image_tokens:
+        b["image_embeds"] = jax.random.normal(
+            ke, (batch, num_image_tokens, cfg.d_model), cfg.dtype)
+    return b
+
+
+__all__ = ["SHAPES", "InputSpec", "lm_input_specs", "embeds_input_specs",
+           "smoke_batch"]

@@ -1,0 +1,41 @@
+"""hubert-xlarge [audio]: 48L d=1280 16H d_ff=5120 vocab=504 — encoder-only
+(same arch as wav2vec2) [arXiv:2106.07447; unverified].
+
+The modality frontend (CNN feature extractor) is a STUB per the assignment:
+input_specs supplies precomputed frame embeddings (B, S, 1280).  Plain GELU MLP
+(not gated), no rope (frontend handles position).  Head padded 504 -> 512 for
+TP divisibility (8 dead classes, masked in the loss).
+Encoder-only -> decode_32k and long_500k skipped (no autoregressive step).
+
+This is the paper-primary arch: its emissions feed the FLASH-BS forced-
+alignment head (serving/alignment.py), reproducing the paper's TIMIT workload.
+"""
+
+from repro.models.transformer import ModelConfig
+from .base import embeds_input_specs
+
+NUM_CLASSES = 504  # true classes; head padded to 512
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge", family="transformer",
+    num_layers=48, d_model=1280, num_heads=16, num_kv_heads=16, head_dim=80,
+    d_ff=5120, vocab=512, act="gelu", encoder_only=True, embed_inputs=False,
+    mlp_glu=False, use_rope=False, tie_embeddings=False,
+)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke", family="transformer",
+    num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, head_dim=16,
+    d_ff=160, vocab=32, act="gelu", encoder_only=True, embed_inputs=False,
+    mlp_glu=False, use_rope=False, tie_embeddings=False,
+    q_block=8, kv_block=8, loss_chunk=8,
+)
+
+SKIPS = {
+    "decode_32k": "encoder-only: no autoregressive decode step",
+    "long_500k": "encoder-only: no autoregressive decode step",
+}
+
+
+def input_specs(shape: str, multi_pod: bool = False):
+    return embeds_input_specs(CONFIG, shape, multi_pod, SKIPS)

@@ -1,0 +1,77 @@
+"""Unified Viterbi operator — the public entry point used by serving, examples
+and benchmarks.
+
+    path, score = viterbi_decode(emissions, log_pi, log_A, method="flash", ...)
+
+`method` selects among the paper's algorithm ("flash", "flash_bs"), the paper's
+baselines ("vanilla", "checkpoint", "beam_static", "beam_static_mp") and the
+beyond-paper associative-scan schedule ("assoc").  Tunables `parallelism`,
+`lanes`, `beam_width` and `chunk` realise the paper's adaptivity story: one
+operator, resource profile chosen per deployment.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .hmm import HMM
+from .vanilla import viterbi_vanilla
+from .checkpoint_viterbi import viterbi_checkpoint
+from .flash import flash_viterbi
+from .flash_bs import flash_bs_viterbi
+from .beam_static import beam_static_viterbi, beam_static_mp_viterbi
+from .assoc import viterbi_assoc
+
+METHODS = ("vanilla", "checkpoint", "flash", "flash_bs",
+           "beam_static", "beam_static_mp", "assoc")
+
+
+def viterbi_decode(
+    emissions: jax.Array,
+    log_pi: jax.Array,
+    log_A: jax.Array,
+    method: str = "flash",
+    *,
+    parallelism: int = 8,
+    lanes: int | None = -1,
+    beam_width: int = 128,
+    chunk: int = 128,
+    seg_len: int | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Decode the max-likelihood state path of (T, K) emissions.
+
+    Returns (path (T,) int32, score). See module docstring for `method`.
+    """
+    if method == "vanilla":
+        return viterbi_vanilla(log_pi, log_A, emissions)
+    if method == "checkpoint":
+        return viterbi_checkpoint(log_pi, log_A, emissions, seg_len=seg_len)
+    if method == "flash":
+        return flash_viterbi(log_pi, log_A, emissions,
+                             parallelism=parallelism, lanes=lanes)
+    if method == "flash_bs":
+        return flash_bs_viterbi(log_pi, log_A, emissions, beam_width=beam_width,
+                                parallelism=parallelism, lanes=lanes, chunk=chunk)
+    if method == "beam_static":
+        return beam_static_viterbi(log_pi, log_A, emissions,
+                                   B=min(beam_width, emissions.shape[1]))
+    if method == "beam_static_mp":
+        return beam_static_mp_viterbi(log_pi, log_A, emissions,
+                                      beam_width=beam_width,
+                                      parallelism=parallelism, lanes=lanes)
+    if method == "assoc":
+        return viterbi_assoc(log_pi, log_A, emissions)
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+
+def viterbi_decode_hmm(obs: jax.Array, hmm: HMM, method: str = "flash",
+                       **kwargs: Any) -> tuple[jax.Array, jax.Array]:
+    """Decode discrete observations under an `HMM` container."""
+    return viterbi_decode(hmm.emissions(obs), hmm.log_pi, hmm.log_A,
+                          method=method, **kwargs)
+
+
+__all__ = ["viterbi_decode", "viterbi_decode_hmm", "METHODS"]

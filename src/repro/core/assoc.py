@@ -1,0 +1,46 @@
+"""Associative-scan Viterbi over the tropical (max, +) semiring — beyond-paper.
+
+Viterbi's DP recurrence is a chain of matrix products in the (max, +) semiring:
+    delta_t = delta_{t-1} (x) M_t,    M_t[i, j] = log A[i, j] + em[t, j].
+Matrix (x) is associative, so `lax.associative_scan` evaluates all prefixes in
+O(log T) depth — a parallelisation axis the paper's CPU-thread / FPGA targets
+cannot afford (it inflates work by a factor K: O(K^3 T) total), but which a
+256-chip pod can when K is small and T is large.  Included as an alternative
+schedule; the roofline comparison vs FLASH is in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _tropical_matmul(a, b):
+    """(max, +) matrix product with leading batch dims."""
+    return jnp.max(a[..., :, :, None] + b[..., None, :, :], axis=-2)
+
+
+@jax.jit
+def viterbi_assoc(log_pi, log_A, em):
+    """Exact Viterbi via tropical associative scan.  O(K^3 T / P) work, O(log T)
+    depth, O(T K^2) memory — small-K / huge-T regime only."""
+    T, K = em.shape
+    Ms = log_A[None, :, :] + em[1:, None, :]                  # (T-1, K, K)
+    F = jax.lax.associative_scan(_tropical_matmul, Ms)        # prefix products
+    d0 = log_pi + em[0]
+    deltas_tail = jnp.max(d0[None, :, None] + F, axis=1)      # (T-1, K)
+    deltas = jnp.concatenate([d0[None], deltas_tail])         # (T, K)
+
+    q_last = jnp.argmax(deltas[-1]).astype(jnp.int32)
+    score = deltas[-1, q_last]
+
+    def back(q, delta_prev):
+        q_prev = jnp.argmax(delta_prev + log_A[:, q]).astype(jnp.int32)
+        return q_prev, q_prev
+
+    _, path_prefix = jax.lax.scan(back, q_last, deltas[:-1], reverse=True)
+    path = jnp.concatenate([path_prefix, q_last[None]])
+    return path, score
+
+
+__all__ = ["viterbi_assoc"]

@@ -1,0 +1,79 @@
+"""Static beam search baselines (SIEVE-BS / SIEVE-BS-Mp analogues, paper Sec. II-B).
+
+Static beam search scores *all* K successor states at each step and only then
+truncates to the top-B — so its transient memory stays O(K) even though only B
+paths survive (the paper's core criticism, Sec. V-C-1).  We provide:
+
+  * `beam_static_viterbi`   — full-table variant: (T, B) survivor/backpointer
+                              tables, backtracked at the end (SIEVE-BS analogue).
+  * `beam_static_mp_viterbi`— divide-and-conquer variant reusing the FLASH
+                              wavefront but with the static per-step truncation
+                              (SIEVE-BS-Mp analogue).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .hmm import NEG_INF
+from . import flash_bs as _fbs
+
+
+@partial(jax.jit, static_argnames=("B",))
+def beam_static_viterbi(log_pi, log_A, em, B: int):
+    """Static beam search with full survivor tables. Returns (path, score)."""
+    T, K = em.shape
+
+    s0 = log_pi + em[0]
+    scores0, states0 = jax.lax.top_k(s0, B)
+
+    def step(carry, em_t):
+        scores, states = carry
+        # static: materialise the full (B, K) candidate block, then truncate
+        cand = scores[:, None] + log_A[states] + em_t[None, :]   # (B, K)
+        from_b = jnp.argmax(cand, axis=0).astype(jnp.int32)      # (K,)
+        best = jnp.max(cand, axis=0)                             # (K,)
+        new_scores, new_states = jax.lax.top_k(best, B)
+        new_states = new_states.astype(jnp.int32)
+        return (new_scores, new_states), (new_states, from_b[new_states])
+
+    (scores, _), (surv_states, surv_from) = jax.lax.scan(
+        step, (scores0, states0.astype(jnp.int32)), em[1:])
+
+    b_best = jnp.argmax(scores)
+    score = scores[b_best]
+
+    # backtrack through the survivor tables: surv_from[t, b] is the beam slot at
+    # t-1 feeding survivor b at t
+    def back(slot, tables):
+        st, frm = tables
+        return frm[slot], st[slot]
+
+    last_slot = b_best.astype(jnp.int32)
+    q_last = surv_states[-1, b_best]
+    first_slot, path_tail = jax.lax.scan(
+        back, last_slot, (surv_states, surv_from), reverse=True)
+    # path_tail[t] is the state at step t+1; prepend step 0
+    q0 = states0.astype(jnp.int32)[first_slot]
+    path = jnp.concatenate([q0[None], path_tail])
+    return path, score
+
+
+def beam_static_mp_viterbi(log_pi, log_A, em, beam_width: int = 128,
+                           parallelism: int = 8, lanes: int | None = -1):
+    """D&C static beam search: FLASH wavefront, but each step materialises K.
+
+    Implemented as FLASH-BS with chunk == K (a single chunk = full
+    materialisation) — the precise formal difference between static and dynamic
+    beam search in this codebase.
+    """
+    K = em.shape[1]
+    return _fbs.flash_bs_viterbi(
+        log_pi, log_A, em, beam_width=beam_width, parallelism=parallelism,
+        lanes=lanes, chunk=K)
+
+
+__all__ = ["beam_static_viterbi", "beam_static_mp_viterbi"]

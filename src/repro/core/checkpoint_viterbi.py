@@ -1,0 +1,91 @@
+"""Checkpoint Viterbi [Tarnas & Hughey 1998] in JAX.
+
+Baseline #2 of the paper: store the delta vector only every ~sqrt(T) steps
+(checkpoints), then re-run each segment during backtracking.  Space O(K sqrt(T)),
+time 2x the vanilla forward pass.
+
+Implemented as two nested `lax.scan`s over a (num_segments, seg_len, K) view so the
+whole decode is one jitted program.  T is padded up to num_segments * seg_len with
+identity steps (transition = tropical identity, emission = 0), which leave delta,
+backpointers and the decoded prefix unchanged.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _identity_step(delta, K):
+    """Tropical-identity DP step: stay in place, add nothing."""
+    return delta, jnp.arange(K, dtype=jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("seg_len",))
+def _checkpoint_decode(log_pi, log_A, em_padded, pad_mask, seg_len: int):
+    Tp, K = em_padded.shape
+    n_seg = Tp // seg_len
+    em_seg = em_padded.reshape(n_seg, seg_len, K)
+    mask_seg = pad_mask.reshape(n_seg, seg_len)
+
+    def dp_step(delta, inp):
+        em_t, is_pad = inp
+        scores = delta[:, None] + log_A
+        psi = jnp.argmax(scores, axis=0).astype(jnp.int32)
+        new = jnp.max(scores, axis=0) + em_t
+        psi = jnp.where(is_pad, jnp.arange(K, dtype=jnp.int32), psi)
+        new = jnp.where(is_pad, delta, new)
+        return new, psi
+
+    # ---- forward: keep delta at each segment start --------------------------
+    def fwd_segment(delta, seg):
+        em_s, mask_s = seg
+        entry = delta
+        delta, _ = jax.lax.scan(dp_step, delta, (em_s, mask_s))
+        return delta, entry
+
+    delta0 = log_pi + em_padded[0]
+    # segment 0's scan starts from t=1; to keep segments uniform, treat t=0 as a
+    # "pre" step: entry of segment 0 is delta0 and its inner scan covers t=1..seg_len-1
+    # plus the first step of segment 1 boundary.  Simpler: run the scan over all Tp
+    # steps with step t=0 replaced by an identity step on delta0.
+    mask0 = mask_seg.at[0, 0].set(True)  # t=0 handled by delta0 init
+    delta_T, entries = jax.lax.scan(fwd_segment, delta0, (em_seg, mask0))
+
+    q_last = jnp.argmax(delta_T).astype(jnp.int32)
+    score = delta_T[q_last]
+
+    # ---- backward: re-run each segment, then backtrack inside it ------------
+    def bwd_segment(q_end, seg):
+        entry, em_s, mask_s = seg
+        _, psis = jax.lax.scan(dp_step, entry, (em_s, mask_s))  # (seg_len, K)
+
+        def back(q, psi_t):
+            q_prev = psi_t[q].astype(jnp.int32)
+            return q_prev, q
+        q_start, states = jax.lax.scan(back, q_end, psis, reverse=True)
+        # states[t] is the decoded state AT step t within this segment
+        return q_start, states
+
+    _, states = jax.lax.scan(
+        bwd_segment, q_last, (entries, em_seg, mask0), reverse=True)
+    path = states.reshape(Tp)
+    return path, score
+
+
+def viterbi_checkpoint(log_pi, log_A, em, seg_len: int | None = None):
+    """Checkpoint Viterbi decode. Returns ((T,) path, score)."""
+    T, K = em.shape
+    if seg_len is None:
+        seg_len = max(1, int(math.ceil(math.sqrt(T))))
+    Tp = int(math.ceil(T / seg_len)) * seg_len
+    em_p = jnp.pad(em, ((0, Tp - T), (0, 0)))
+    mask = jnp.arange(Tp) >= T
+    path, score = _checkpoint_decode(log_pi, log_A, em_p, mask, seg_len)
+    return path[:T], score
+
+
+__all__ = ["viterbi_checkpoint"]

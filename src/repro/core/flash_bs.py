@@ -1,0 +1,251 @@
+"""FLASH-BS Viterbi — dynamic beam search variant (paper Sec. V-C).
+
+The paper maintains the running top-B candidates with a pair of double-buffered
+min-heaps so that the full K-vector of scores is never materialised.  TPUs have no
+efficient scalar heap, so we use the vectorised equivalent with identical
+asymptotics: **streaming chunked top-B**.  Target states are scored in lane-aligned
+chunks of C; each (B x C) candidate block is reduced per-target over the beam and
+merged into the running top-B by `lax.top_k` over B + C entries.  Live state is
+O(B + C), never O(K) — the defining property of *dynamic* (vs static) beam search.
+The running-beam buffer and the merge buffer alternate roles every chunk, which is
+the paper's double-buffering scheme expressed as an SSA loop carry.
+
+The divide-and-conquer / pruning wavefront is shared with `flash.py`; only the
+per-tile DP differs.  A tile's pinned exit state may occasionally be absent from
+the child's final beam (the child explores a slightly different candidate set than
+its parent under narrow beams); we then fall back to the best beam element, which
+is the standard beam-search approximation and is what the paper's relative-error
+metric (Fig. 9) quantifies.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hmm import NEG_INF
+from .flash import plan_padding, chunked_vmap
+
+_SENTINEL = 4.0 * NEG_INF  # below any reachable (even "unreachable-edge") score
+
+
+# ---------------------------------------------------------------------------
+# Streaming top-B primitives
+# ---------------------------------------------------------------------------
+
+def _stream_top_b(chunk_scores_fn, K_pad: int, chunk: int, B: int):
+    """Top-B of a virtual length-K_pad score vector, materialising C at a time.
+
+    chunk_scores_fn(c) -> (C,) scores of states [c*C, (c+1)*C).
+    Returns (scores (B,), states (B,)) sorted descending.
+    """
+    nchunks = K_pad // chunk
+
+    def body(c, carry):
+        rs, rst = carry
+        v = chunk_scores_fn(c)
+        st = (c * chunk + jnp.arange(chunk)).astype(jnp.int32)
+        all_s = jnp.concatenate([rs, v])
+        all_st = jnp.concatenate([rst, st])
+        top_s, idx = jax.lax.top_k(all_s, B)
+        return top_s, all_st[idx]
+
+    init = (jnp.full((B,), _SENTINEL, dtype=jnp.float32),
+            jnp.zeros((B,), dtype=jnp.int32))
+    return jax.lax.fori_loop(0, nchunks, body, init)
+
+
+def _beam_transition(log_A, em_t, scores, states, chunk: int, B: int):
+    """One dynamic-beam DP step.
+
+    Returns (new_scores, new_states, from_idx) where from_idx[b] indexes the
+    predecessor *beam slot* of new beam entry b.
+    """
+    K_pad = log_A.shape[1]
+    nchunks = K_pad // chunk
+
+    def body(c, carry):
+        rs, rst, rfrom = carry
+        colA = jax.lax.dynamic_slice(log_A, (0, c * chunk),
+                                     (log_A.shape[0], chunk))   # (K, C)
+        rows = colA[states]                                     # (B, C)
+        em_c = jax.lax.dynamic_slice(em_t, (c * chunk,), (chunk,))
+        cand = scores[:, None] + rows + em_c[None, :]           # (B, C)
+        from_b = jnp.argmax(cand, axis=0).astype(jnp.int32)     # (C,)
+        best = jnp.max(cand, axis=0)
+        tgt = (c * chunk + jnp.arange(chunk)).astype(jnp.int32)
+        all_s = jnp.concatenate([rs, best])
+        all_st = jnp.concatenate([rst, tgt])
+        all_f = jnp.concatenate([rfrom, from_b])
+        top_s, idx = jax.lax.top_k(all_s, B)
+        return top_s, all_st[idx], all_f[idx]
+
+    init = (jnp.full((B,), _SENTINEL, dtype=jnp.float32),
+            jnp.zeros((B,), dtype=jnp.int32),
+            jnp.zeros((B,), dtype=jnp.int32))
+    return jax.lax.fori_loop(0, nchunks, body, init)
+
+
+def _pad_identity(is_pad, scores, states, ns, nst, nfrom):
+    """Pad timesteps are tropical-identity: beam unchanged, self backpointers.
+
+    (A full carry-freeze would be wrong: mid/div assignments that fire on a pad
+    step must still see identity backpointers, mirroring `flash._dp_step`.)
+    """
+    B = scores.shape[0]
+    eye = jnp.arange(B, dtype=jnp.int32)
+    return (jnp.where(is_pad, scores, ns),
+            jnp.where(is_pad, states, nst),
+            jnp.where(is_pad, eye, nfrom))
+
+
+# ---------------------------------------------------------------------------
+# Initial pass (beam over full sequence, tracking P-1 division states)
+# ---------------------------------------------------------------------------
+
+def _bs_initial_pass(log_pi, log_A, em, pad, boundaries: np.ndarray,
+                     B: int, chunk: int):
+    Tp, K_pad = em.shape
+    nb = len(boundaries)
+    bnd = jnp.asarray(boundaries, dtype=jnp.int32)
+
+    s0, st0 = _stream_top_b(
+        lambda c: jax.lax.dynamic_slice(log_pi + em[0], (c * chunk,), (chunk,)),
+        K_pad, chunk, B)
+    div0 = jnp.zeros((B, nb), dtype=jnp.int32)
+
+    def step(carry, inp):
+        scores, states, div = carry
+        em_t, is_pad, t = inp
+        ns, nst, nfrom = _beam_transition(log_A, em_t, scores, states, chunk, B)
+        ns, nst, nfrom = _pad_identity(is_pad, scores, states, ns, nst, nfrom)
+        just = (t == bnd + 1)                       # (nb,)
+        div_new = jnp.where(just[None, :], states[nfrom][:, None], div[nfrom, :])
+        return (ns, nst, div_new), None
+
+    ts = jnp.arange(1, Tp, dtype=jnp.int32)
+    (scores, states, div), _ = jax.lax.scan(
+        step, (s0, st0, div0), (em[1:], pad[1:], ts))
+    b_best = jnp.argmax(scores)
+    q_last = states[b_best]
+    score = scores[b_best]
+    q_bounds = div[b_best, :]
+    return q_bounds, q_last, score
+
+
+# ---------------------------------------------------------------------------
+# Per-tile beam DP
+# ---------------------------------------------------------------------------
+
+def _bs_segment_decode(log_pi, log_A, em_seg, pad_seg, entry, exit_state,
+                       is_first, B: int, chunk: int):
+    s, K_pad = em_seg.shape
+    tm = s // 2 - 1
+
+    def init_chunk(c):
+        em_c = jax.lax.dynamic_slice(em_seg[0], (c * chunk,), (chunk,))
+        row = jax.lax.dynamic_slice(log_A[entry], (c * chunk,), (chunk,))
+        pi_c = jax.lax.dynamic_slice(log_pi, (c * chunk,), (chunk,))
+        return jnp.where(is_first, pi_c, row) + em_c
+
+    s0, st0 = _stream_top_b(init_chunk, K_pad, chunk, B)
+    mid0 = jnp.zeros((B,), dtype=jnp.int32)
+
+    def step(carry, inp):
+        scores, states, mid = carry
+        em_t, is_pad, tl = inp
+        ns, nst, nfrom = _beam_transition(log_A, em_t, scores, states, chunk, B)
+        ns, nst, nfrom = _pad_identity(is_pad, scores, states, ns, nst, nfrom)
+        mid_new = jnp.where(tl == tm + 1, states[nfrom], mid[nfrom])
+        return (ns, nst, mid_new), None
+
+    tls = jnp.arange(1, s, dtype=jnp.int32)
+    (scores, states, mid), _ = jax.lax.scan(
+        step, (s0, st0, mid0), (em_seg[1:], pad_seg[1:], tls))
+
+    # exit state may have fallen off the beam: fall back to the best element
+    hit = states == exit_state
+    has = jnp.any(hit)
+    idx = jnp.where(has, jnp.argmax(hit), jnp.argmax(scores))
+    return mid[idx]
+
+
+# ---------------------------------------------------------------------------
+# Full decoder
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("P", "lanes", "B", "chunk"))
+def _flash_bs_padded(log_pi, log_A, em, pad, P: int, lanes: int | None,
+                     B: int, chunk: int):
+    Tp, K_pad = em.shape
+    seg0 = Tp // P
+
+    boundaries = (np.arange(1, P) * seg0 - 1).astype(np.int64)
+    q_bounds, q_last, score = _bs_initial_pass(
+        log_pi, log_A, em, pad, boundaries, B, chunk)
+
+    q_star = jnp.zeros((Tp,), dtype=jnp.int32)
+    q_star = q_star.at[Tp - 1].set(q_last)
+    if P > 1:
+        q_star = q_star.at[jnp.asarray(boundaries)].set(q_bounds)
+
+    s = seg0
+    while s >= 2:
+        n = Tp // s
+        starts = np.arange(n, dtype=np.int64) * s
+        ends = starts + s - 1
+        mids = starts + s // 2 - 1
+        em_tiles = em.reshape(n, s, K_pad)
+        pad_tiles = pad.reshape(n, s)
+        entries = q_star[jnp.asarray(np.maximum(starts - 1, 0))]
+        exits = q_star[jnp.asarray(ends)]
+        is_first = jnp.asarray(starts == 0)
+
+        fn = partial(_bs_segment_decode, log_pi, log_A, B=B, chunk=chunk)
+        mid_states = chunked_vmap(
+            fn, (em_tiles, pad_tiles, entries, exits, is_first), lanes)
+        q_star = q_star.at[jnp.asarray(mids)].set(mid_states)
+        s //= 2
+    return q_star, score
+
+
+def flash_bs_viterbi(log_pi, log_A, em, beam_width: int = 128,
+                     parallelism: int = 8, lanes: int | None = -1,
+                     chunk: int = 128):
+    """FLASH-BS Viterbi decode (dynamic beam search).
+
+    Returns (path, score).  With beam_width >= K this is exact (ties aside);
+    narrower beams trade accuracy for time/memory per paper Fig. 9.
+    """
+    T, K = em.shape
+    P = int(parallelism)
+    if lanes == -1:
+        lanes = P
+    B = int(min(beam_width, K))
+    chunk = int(min(chunk, K))  # chunk == K degenerates to static beam search
+
+    # pad K to a multiple of chunk; fake states get sentinel emissions and
+    # sentinel in/out transitions so they can never displace real candidates
+    K_pad = int(math.ceil(K / chunk)) * chunk
+    if K_pad != K:
+        em = jnp.pad(em, ((0, 0), (0, K_pad - K)), constant_values=_SENTINEL / 2)
+        log_A = jnp.pad(log_A, ((0, K_pad - K), (0, K_pad - K)),
+                        constant_values=_SENTINEL / 2)
+        log_pi = jnp.pad(log_pi, (0, K_pad - K), constant_values=_SENTINEL / 2)
+
+    if T == 1:
+        q = jnp.argmax(log_pi + em[0]).astype(jnp.int32)
+        return q[None], (log_pi + em[0])[q]
+
+    Tp, _ = plan_padding(T, P)
+    em_p = jnp.pad(em, ((0, Tp - T), (0, 0)))
+    pad = jnp.arange(Tp) >= T
+    q_star, score = _flash_bs_padded(log_pi, log_A, em_p, pad, P, lanes, B, chunk)
+    return q_star[:T], score
+
+
+__all__ = ["flash_bs_viterbi"]

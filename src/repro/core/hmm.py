@@ -1,0 +1,176 @@
+"""HMM substrate: log-domain model container, synthetic generators, scoring helpers.
+
+Everything downstream (the decoders in this package, the serving alignment head,
+the benchmarks) consumes the unified log-domain representation defined here:
+
+  * ``log_pi``   -- (K,)   initial state log-probabilities
+  * ``log_A``    -- (K, K) transition log-probabilities, ``log_A[i, j] = log P(j | i)``
+  * ``log_B``    -- (K, M) emission log-probabilities for discrete observations
+  * emissions    -- (T, K) per-timestep state log-likelihoods (``log_B[:, x_t].T`` for
+                    discrete observations, or neural-network frame posteriors for the
+                    forced-alignment / serving paths)
+
+Missing transitions (Erdős–Rényi graphs with edge probability p < 1) are encoded as
+``NEG_INF`` (a large finite negative) rather than ``-inf`` so that float32 max-plus
+arithmetic never produces NaNs while remaining far below any reachable path score.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Large finite "minus infinity".  T * |NEG_INF| must stay well inside float32 range;
+# 2^20 timesteps * 1e9 = 1e15 << 3.4e38, so even the 500k-step long-context decode
+# path cannot overflow.
+NEG_INF = -1.0e9
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class HMM:
+    """Log-domain HMM parameter triplet (pi, A, B)."""
+
+    log_pi: jax.Array  # (K,)
+    log_A: jax.Array   # (K, K)
+    log_B: jax.Array   # (K, M)
+
+    @property
+    def num_states(self) -> int:
+        return self.log_A.shape[0]
+
+    @property
+    def num_obs(self) -> int:
+        return self.log_B.shape[1]
+
+    def emissions(self, obs: jax.Array) -> jax.Array:
+        """Dense per-timestep emission scores, shape (T, K), for int obs (T,)."""
+        return jnp.take(self.log_B, obs, axis=1).T
+
+    # -- pytree protocol ------------------------------------------------------
+    def tree_flatten(self):
+        return (self.log_pi, self.log_A, self.log_B), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic model generators (paper Sec. VII-A)
+# ---------------------------------------------------------------------------
+
+def erdos_renyi_hmm(
+    key: jax.Array,
+    num_states: int,
+    num_obs: int = 50,
+    edge_prob: float = 0.253,
+    ensure_connected: bool = True,
+) -> HMM:
+    """Random HMM whose transition graph is G(K, p), as in the paper's experiments.
+
+    Every present edge gets a Dirichlet-ish random weight (renormalised over the
+    out-edges of each state); absent edges get ``NEG_INF``.  ``ensure_connected``
+    adds a ring lattice so every state has at least one in- and out-edge, keeping
+    all decoding problems feasible at any p.
+    """
+    k_edges, k_trans, k_pi, k_emit = jax.random.split(key, 4)
+    mask = jax.random.bernoulli(k_edges, edge_prob, (num_states, num_states))
+    if ensure_connected:
+        ring = jnp.eye(num_states, dtype=bool)
+        ring = jnp.roll(ring, 1, axis=1)  # i -> i+1 mod K
+        mask = mask | ring
+    raw = jax.random.uniform(k_trans, (num_states, num_states), minval=0.05, maxval=1.0)
+    weights = jnp.where(mask, raw, 0.0)
+    row_sum = jnp.sum(weights, axis=1, keepdims=True)
+    probs = weights / row_sum
+    log_A = jnp.where(mask, jnp.log(jnp.maximum(probs, 1e-30)), NEG_INF)
+
+    pi = jax.random.dirichlet(k_pi, jnp.ones((num_states,)) * 0.8)
+    log_pi = jnp.log(jnp.maximum(pi, 1e-30))
+
+    emit = jax.random.dirichlet(k_emit, jnp.ones((num_obs,)) * 0.5, (num_states,))
+    log_B = jnp.log(jnp.maximum(emit, 1e-30))
+    return HMM(log_pi=log_pi, log_A=log_A, log_B=log_B)
+
+
+def left_to_right_hmm(
+    key: jax.Array,
+    num_states: int,
+    num_obs: int,
+    self_loop: float = 0.6,
+    max_skip: int = 2,
+) -> HMM:
+    """Bakis (left-to-right) HMM used by forced alignment (paper Sec. VII-A TIMIT)."""
+    k_emit, k_noise = jax.random.split(key)
+    idx = jnp.arange(num_states)
+    delta = idx[None, :] - idx[:, None]  # j - i
+    allowed = (delta >= 0) & (delta <= max_skip)
+    base = jnp.where(delta == 0, self_loop, (1.0 - self_loop) / max_skip)
+    noise = jax.random.uniform(k_noise, (num_states, num_states), minval=0.8, maxval=1.2)
+    weights = jnp.where(allowed, base * noise, 0.0)
+    # last rows renormalise over remaining allowed targets
+    probs = weights / jnp.maximum(jnp.sum(weights, axis=1, keepdims=True), 1e-30)
+    log_A = jnp.where(allowed, jnp.log(jnp.maximum(probs, 1e-30)), NEG_INF)
+    log_pi = jnp.full((num_states,), NEG_INF).at[0].set(0.0)
+    emit = jax.random.dirichlet(k_emit, jnp.ones((num_obs,)) * 0.5, (num_states,))
+    log_B = jnp.log(jnp.maximum(emit, 1e-30))
+    return HMM(log_pi=log_pi, log_A=log_A, log_B=log_B)
+
+
+def sample_observations(key: jax.Array, hmm: HMM, length: int) -> tuple[jax.Array, jax.Array]:
+    """Ancestral sampling of (hidden states, observations) of given length."""
+    k0, key = jax.random.split(key)
+    s0 = jax.random.categorical(k0, hmm.log_pi)
+
+    def step(carry, k):
+        s = carry
+        ka, kb = jax.random.split(k)
+        s_next = jax.random.categorical(ka, hmm.log_A[s])
+        o = jax.random.categorical(kb, hmm.log_B[s])
+        return s_next, (s, o)
+
+    keys = jax.random.split(key, length)
+    _, (states, obs) = jax.lax.scan(step, s0, keys)
+    return states, obs
+
+
+# ---------------------------------------------------------------------------
+# Scoring helpers
+# ---------------------------------------------------------------------------
+
+def path_score(log_pi: jax.Array, log_A: jax.Array, emissions: jax.Array,
+               path: jax.Array) -> jax.Array:
+    """Log-likelihood of a concrete state path under (pi, A, emissions)."""
+    first = log_pi[path[0]] + emissions[0, path[0]]
+    trans = log_A[path[:-1], path[1:]]
+    emit = jnp.take_along_axis(emissions[1:], path[1:, None], axis=1)[:, 0]
+    return first + jnp.sum(trans) + jnp.sum(emit)
+
+
+def relative_error(opt_ll: jax.Array, ll: jax.Array) -> jax.Array:
+    """Paper Sec. VII-D metric: eta = |l_opt - l| / |l_opt|."""
+    return jnp.abs(opt_ll - ll) / jnp.abs(opt_ll)
+
+
+def random_emissions(key: jax.Array, length: int, num_states: int,
+                     scale: float = 2.0) -> jax.Array:
+    """Well-separated random emissions (ties have measure ~0) for tests/benches."""
+    return scale * jax.random.normal(key, (length, num_states))
+
+
+__all__ = [
+    "HMM",
+    "NEG_INF",
+    "erdos_renyi_hmm",
+    "left_to_right_hmm",
+    "sample_observations",
+    "path_score",
+    "relative_error",
+    "random_emissions",
+]

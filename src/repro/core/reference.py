@@ -1,0 +1,157 @@
+"""Pure-numpy reference decoders.
+
+Two roles:
+  1. Oracles for every JAX/Pallas implementation in the test-suite (including an
+     exhaustive brute-force search for tiny problems).
+  2. The "interpreted baseline" column of the Table-I analogue benchmark — the
+     paper reports Python vs C implementations; our analogue is numpy (interpreted,
+     per-op dispatch) vs jitted XLA (compiled).
+"""
+
+from __future__ import annotations
+
+import itertools
+
+import numpy as np
+
+NEG_INF = -1.0e9
+
+
+def viterbi_numpy(log_pi: np.ndarray, log_A: np.ndarray, em: np.ndarray):
+    """Vanilla Viterbi, O(KT) space. Returns (path (T,), score)."""
+    T, K = em.shape
+    delta = log_pi + em[0]
+    psi = np.zeros((T, K), dtype=np.int64)
+    for t in range(1, T):
+        scores = delta[:, None] + log_A  # (K, K): src x dst
+        psi[t] = np.argmax(scores, axis=0)
+        delta = scores[psi[t], np.arange(K)] + em[t]
+    path = np.zeros((T,), dtype=np.int64)
+    path[-1] = int(np.argmax(delta))
+    for t in range(T - 2, -1, -1):
+        path[t] = psi[t + 1][path[t + 1]]
+    return path, float(np.max(delta))
+
+
+def checkpoint_viterbi_numpy(log_pi: np.ndarray, log_A: np.ndarray, em: np.ndarray):
+    """Checkpoint Viterbi [Tarnas & Hughey 98]: O(K sqrt(T)) space."""
+    T, K = em.shape
+    c = max(1, int(np.ceil(np.sqrt(T))))
+    # forward: store delta at checkpoint starts
+    starts = list(range(0, T, c))
+    saved = {}
+    delta = log_pi + em[0]
+    saved[0] = delta.copy()
+    for t in range(1, T):
+        delta = np.max(delta[:, None] + log_A, axis=0) + em[t]
+        if t in starts:
+            saved[t] = delta.copy()
+    path = np.zeros((T,), dtype=np.int64)
+    path[-1] = int(np.argmax(delta))
+    score = float(np.max(delta))
+    # backward: re-run each segment to recover its psi table, then backtrack
+    for s in reversed(starts):
+        e = min(s + c, T) - 1  # inclusive segment end; path[e] known (or e == T-1)
+        d = saved[s].copy()
+        psis = np.zeros((e - s + 1, K), dtype=np.int64)
+        for t in range(s + 1, e + 1):
+            scores = d[:, None] + log_A
+            psis[t - s] = np.argmax(scores, axis=0)
+            d = scores[psis[t - s], np.arange(K)] + em[t]
+        for t in range(e - 1, s - 1, -1):
+            path[t] = psis[t - s + 1][path[t + 1]]
+    return path, score
+
+
+def brute_force(log_pi: np.ndarray, log_A: np.ndarray, em: np.ndarray):
+    """Exhaustive search over all K^T paths. Tiny problems only."""
+    T, K = em.shape
+    best, best_path = -np.inf, None
+    for path in itertools.product(range(K), repeat=T):
+        s = log_pi[path[0]] + em[0, path[0]]
+        for t in range(1, T):
+            s += log_A[path[t - 1], path[t]] + em[t, path[t]]
+        if s > best:
+            best, best_path = s, path
+    return np.asarray(best_path, dtype=np.int64), float(best)
+
+
+def path_score_numpy(log_pi, log_A, em, path) -> float:
+    s = log_pi[path[0]] + em[0, path[0]]
+    for t in range(1, len(path)):
+        s += log_A[path[t - 1], path[t]] + em[t, path[t]]
+    return float(s)
+
+
+def sieve_mp_numpy(log_pi: np.ndarray, log_A: np.ndarray, em: np.ndarray):
+    """SIEVE-MiddlePath [Ciaperoni+ 22]: recursive sequence-halving D&C, O(K) space.
+
+    The paper's strongest space-efficient baseline.  Faithfully *recursive* (this is
+    exactly the structural cost FLASH removes); each call runs DP over its segment
+    tracking only the mid-point backpointer.
+
+    Unlike FLASH, SIEVE-Mp does NOT prune: the right child is seeded with the full
+    delta K-vector captured at the parent's midpoint (this cross-subtask K-vector
+    dependency is exactly what FLASH's pruning removes to unlock parallelism).
+    """
+    T, K = em.shape
+    path = np.zeros((T,), dtype=np.int64)
+
+    def segment_dp(m, n, entry_delta):
+        """DP over [m, n].
+
+        Returns (delta_n, mid, delta_mid) where mid[j] is the state at tmid of the
+        best path reaching state j at n, and delta_mid is the delta vector at tmid
+        (handed to the right child, SIEVE-Mp style).
+        """
+        tmid = (m + n) // 2
+        if entry_delta is None:  # m == 0
+            delta = log_pi + em[0]
+        else:
+            delta = np.max(entry_delta[:, None] + log_A, axis=0) + em[m]
+        mid = np.zeros((K,), dtype=np.int64)
+        delta_mid = delta.copy() if tmid == m else None
+        for t in range(m + 1, n + 1):
+            scores = delta[:, None] + log_A
+            psi = np.argmax(scores, axis=0)
+            delta = scores[psi, np.arange(K)] + em[t]
+            if t == tmid:
+                delta_mid = delta.copy()
+            if t == tmid + 1:
+                mid = psi.copy()
+            elif t > tmid + 1:
+                mid = mid[psi]
+        return delta, mid, delta_mid
+
+    score_box = [None]
+
+    def solve(m, n, entry_delta, exit_state):
+        if n <= m:
+            return
+        tmid = (m + n) // 2
+        delta, mid, delta_mid = segment_dp(m, n, entry_delta)
+        if exit_state is None:  # top-level call: pin the global final state
+            exit_state = int(np.argmax(delta))
+            path[n] = exit_state
+            score_box[0] = float(np.max(delta))
+        q_mid = int(mid[exit_state])
+        path[tmid] = q_mid
+        if n == m + 1:  # tmid == m: segment fully resolved
+            return
+        solve(m, tmid, entry_delta, q_mid)       # left half: exit pinned at tmid
+        solve(tmid + 1, n, delta_mid, exit_state)  # right half: full K-vector seed
+
+    if T == 1:
+        path[0] = int(np.argmax(log_pi + em[0]))
+        return path, float(np.max(log_pi + em[0]))
+    solve(0, T - 1, None, None)
+    return path, float(score_box[0])
+
+
+__all__ = [
+    "viterbi_numpy",
+    "checkpoint_viterbi_numpy",
+    "brute_force",
+    "path_score_numpy",
+    "sieve_mp_numpy",
+]

@@ -1,0 +1,55 @@
+"""Vanilla Viterbi in JAX: `lax.scan` forward pass + reverse-scan backtracking.
+
+Baseline #1 of the paper (O(K^2 T) time, O(KT) space — the full psi table is
+materialised).  This is also the semantic oracle for every optimised variant.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=())
+def viterbi_vanilla(log_pi: jax.Array, log_A: jax.Array, em: jax.Array):
+    """Exact Viterbi decode.
+
+    Args:
+      log_pi: (K,) initial log-probs.
+      log_A:  (K, K) transition log-probs, [src, dst].
+      em:     (T, K) emission log-likelihoods per timestep.
+
+    Returns:
+      (path, score): (T,) int32 optimal state sequence and its log-likelihood.
+    """
+    K = em.shape[1]
+
+    def forward(delta, em_t):
+        scores = delta[:, None] + log_A              # (K_src, K_dst)
+        psi = jnp.argmax(scores, axis=0)             # (K_dst,)
+        new = jnp.max(scores, axis=0) + em_t
+        return new, psi
+
+    delta0 = log_pi + em[0]
+    delta_T, psis = jax.lax.scan(forward, delta0, em[1:])  # psis: (T-1, K)
+
+    q_last = jnp.argmax(delta_T).astype(jnp.int32)
+    score = delta_T[q_last]
+
+    def backward(q, psi_t):
+        q_prev = psi_t[q].astype(jnp.int32)
+        return q_prev, q_prev
+
+    _, path_prefix = jax.lax.scan(backward, q_last, psis, reverse=True)
+    path = jnp.concatenate([path_prefix, q_last[None]])
+    return path, score
+
+
+def viterbi_vanilla_batched(log_pi, log_A, em_batch):
+    """vmap over a batch of emission sequences (B, T, K)."""
+    return jax.vmap(lambda e: viterbi_vanilla(log_pi, log_A, e))(em_batch)
+
+
+__all__ = ["viterbi_vanilla", "viterbi_vanilla_batched"]

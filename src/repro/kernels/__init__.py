@@ -1,0 +1,13 @@
+"""Pallas TPU kernels for the FLASH Viterbi hot paths.
+
+Layout per EXAMPLE.md: one <name>.py per kernel (pl.pallas_call + BlockSpec),
+ops.py jit'd wrappers with padding/fallbacks, ref.py pure-jnp oracles.
+"""
+
+from . import ops, ref
+from .tropical import tropical_matmul as tropical_matmul_pallas
+from .viterbi_dp import viterbi_forward as viterbi_forward_pallas
+from .beam_stream import beam_step as beam_step_pallas
+
+__all__ = ["ops", "ref", "tropical_matmul_pallas", "viterbi_forward_pallas",
+           "beam_step_pallas"]

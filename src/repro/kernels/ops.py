@@ -1,0 +1,106 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle padding/tile selection/fallbacks so callers never see the kernels'
+alignment constraints, and they flip to `interpret=True` automatically off-TPU
+(this container validates kernels in interpret mode; on TPU the same call sites
+compile the real thing).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .tropical import tropical_matmul as _tropical_pallas
+from .viterbi_dp import viterbi_forward as _vit_fwd_pallas
+from .beam_stream import beam_step as _beam_step_pallas
+
+_NEG = -1.0e9
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value) -> jax.Array:
+    n = x.shape[axis]
+    target = int(np.ceil(n / mult)) * mult
+    if target == n:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, target - n)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def tropical_matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None):
+    """(max,+) product with argmax, arbitrary shapes. Returns (vals, args)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    I, K = a.shape
+    _, J = b.shape
+    bi = 8 if I < 64 else 64
+    bk = 8 if K < 16 else 16
+    bj = 128 if J < 256 else 256
+    ap = _pad_to(_pad_to(a, 0, bi, _NEG), 1, bk, _NEG)
+    bp = _pad_to(_pad_to(b, 0, bk, _NEG), 1, bj, _NEG)
+    vals, args = _tropical_pallas(ap, bp, bi=bi, bk=bk, bj=bj,
+                                  interpret=interpret)
+    args = jnp.minimum(args, K - 1)  # pad-K argmax can only win on pad rows
+    return vals[:I, :J], args[:I, :J]
+
+
+def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array, *,
+                    bt: int = 8, interpret: bool | None = None,
+                    vmem_limit_bytes: int = 12 * 2**20):
+    """Fused Viterbi forward pass with XLA fallback when K exceeds VMEM.
+
+    em covers steps 1..T (delta0 is step 0). Returns (psi (T,K) i32, delta_T).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    T, K = em.shape
+    a_bytes = K * K * log_A.dtype.itemsize
+    work = a_bytes + 3 * bt * K * 4 + K * K * 4  # A + streams + scores intermediate
+    if K % 128 != 0 or work > vmem_limit_bytes:
+        return _ref.viterbi_forward_ref(log_A, em, delta0)  # XLA path
+    while T % bt:  # largest block size that tiles T exactly (keeps kernel exact)
+        bt //= 2
+    return _vit_fwd_pallas(log_A, em, delta0, bt=bt, interpret=interpret)
+
+
+def viterbi_decode_fused(log_pi: jax.Array, log_A: jax.Array, em: jax.Array,
+                         *, bt: int = 8, interpret: bool | None = None):
+    """Full Viterbi decode using the fused forward kernel + XLA backtracking."""
+    delta0 = log_pi + em[0]
+    psi, delta_T = viterbi_forward(log_A, em[1:], delta0, bt=bt,
+                                   interpret=interpret)
+    q_last = jnp.argmax(delta_T).astype(jnp.int32)
+
+    def back(q, psi_t):
+        q_prev = psi_t[q].astype(jnp.int32)
+        return q_prev, q_prev
+
+    _, prefix = jax.lax.scan(back, q_last, psi, reverse=True)
+    return jnp.concatenate([prefix, q_last[None]]), delta_T[q_last]
+
+
+def beam_step(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
+              states: jax.Array, *, chunk: int = 256,
+              interpret: bool | None = None):
+    """Streaming dynamic-beam step, arbitrary K (padded to chunk)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    K = log_A.shape[0]
+    chunk = min(chunk, int(np.ceil(K / 128)) * 128)
+    Ap = _pad_to(_pad_to(log_A, 0, chunk, _NEG * 4), 1, chunk, _NEG * 4)
+    em_p = _pad_to(em_t, 0, chunk, _NEG * 4)
+    return _beam_step_pallas(Ap, em_p, scores, states, chunk=chunk,
+                             interpret=interpret)
+
+
+__all__ = ["tropical_matmul", "viterbi_forward", "viterbi_decode_fused",
+           "beam_step"]

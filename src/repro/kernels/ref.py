@@ -1,0 +1,45 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification its kernel is tested against
+(tests/test_kernels.py sweeps shapes/dtypes and asserts allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tropical_matmul_ref(a: jax.Array, b: jax.Array):
+    """(I,K) x (K,J) -> ((I,J) max values, (I,J) int32 argmax over K)."""
+    s = a[:, :, None] + b[None, :, :]
+    return jnp.max(s, axis=1), jnp.argmax(s, axis=1).astype(jnp.int32)
+
+
+def viterbi_forward_ref(log_A: jax.Array, em: jax.Array, delta0: jax.Array):
+    """Reference for kernels.viterbi_dp.viterbi_forward."""
+    def step(delta, em_t):
+        scores = delta[:, None] + log_A
+        psi = jnp.argmax(scores, axis=0).astype(jnp.int32)
+        return jnp.max(scores, axis=0) + em_t, psi
+
+    delta_T, psis = jax.lax.scan(step, delta0, em)
+    return psis, delta_T
+
+
+def beam_step_ref(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
+                  states: jax.Array):
+    """Reference for kernels.beam_stream.beam_step.
+
+    Candidate targets are reduced over the beam; ties broken toward the lower
+    beam slot / lower target id, matching the kernel's selection order.
+    """
+    B = scores.shape[0]
+    cand = scores[:, None] + log_A[states] + em_t[None, :]     # (B, K)
+    best = jnp.max(cand, axis=0)
+    from_b = jnp.argmax(cand, axis=0).astype(jnp.int32)
+    top_s, top_st = jax.lax.top_k(best, B)
+    return top_s, top_st.astype(jnp.int32), from_b[top_st]
+
+
+__all__ = ["tropical_matmul_ref", "viterbi_forward_ref", "beam_step_ref"]

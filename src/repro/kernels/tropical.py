@@ -1,0 +1,85 @@
+"""Tropical (max, +) matrix product Pallas TPU kernel, with argmax backpointers.
+
+    C[i, j]   = max_k (A[i, k] + B[k, j])
+    arg[i, j] = argmax_k (A[i, k] + B[k, j])
+
+This is the inner operation of every Viterbi DP step (A = batched delta vectors,
+B = transition matrix) and of the associative-scan schedule (A, B = tropical
+matrix products).  It cannot use the MXU — (max, +) is a semiring, not a ring —
+so the kernel is laid out for the VPU: 8x128-aligned tiles, a 3-D grid
+(I/bi, J/bj, K/bk) with the contraction dimension innermost, and the running
+(max, argmax) accumulator held in the revisited output block in VMEM.
+
+VMEM budget per grid step (defaults bi=64, bk=16, bj=256, fp32):
+    A tile 64*16*4 = 4 KiB, B tile 16*256*4 = 16 KiB,
+    broadcast intermediate 64*16*256*4 = 1 MiB, C/arg tiles 2*64*256*4 = 128 KiB
+comfortably under the 16 MiB/core budget, leaving room for the Pallas pipeline's
+double-buffered input blocks (the hardware analogue of the paper's double-buffered
+BRAM scheme).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _tropical_kernel(a_ref, b_ref, c_ref, arg_ref, *, bk: int):
+    k = pl.program_id(2)
+
+    a = a_ref[...]          # (bi, bk)
+    b = b_ref[...]          # (bk, bj)
+    s = a[:, :, None] + b[None, :, :]            # (bi, bk, bj)
+    m = jnp.max(s, axis=1)                       # (bi, bj)
+    arg = jnp.argmax(s, axis=1).astype(jnp.int32) + k * bk
+
+    @pl.when(k == 0)
+    def _init():
+        c_ref[...] = m
+        arg_ref[...] = arg
+
+    @pl.when(k > 0)
+    def _update():
+        prev = c_ref[...]
+        take = m > prev
+        c_ref[...] = jnp.where(take, m, prev)
+        arg_ref[...] = jnp.where(take, arg, arg_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bi", "bk", "bj", "interpret"))
+def tropical_matmul(a: jax.Array, b: jax.Array, *, bi: int = 64, bk: int = 16,
+                    bj: int = 256, interpret: bool = False):
+    """(max, +) product of (I, K) x (K, J) -> values (I, J), argmax (I, J) int32.
+
+    Shapes must divide the tile sizes; `ops.tropical_matmul` pads arbitrary
+    shapes and picks tiles.
+    """
+    I, K = a.shape
+    K2, J = b.shape
+    assert K == K2, (a.shape, b.shape)
+    assert I % bi == 0 and K % bk == 0 and J % bj == 0, (a.shape, b.shape, (bi, bk, bj))
+
+    grid = (I // bi, J // bj, K // bk)
+    return pl.pallas_call(
+        functools.partial(_tropical_kernel, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bi, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bj), lambda i, j, k: (k, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+            pl.BlockSpec((bi, bj), lambda i, j, k: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((I, J), a.dtype),
+            jax.ShapeDtypeStruct((I, J), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a, b)
+
+
+__all__ = ["tropical_matmul"]

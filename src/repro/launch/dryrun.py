@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes, print memory/cost analysis, and emit roofline rows.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k [--multi-pod] [--json out.json]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+The XLA_FLAGS line above MUST run before any jax import: jax locks the device
+count at first init.  512 host devices cover both the 256-chip single-pod mesh
+and the 512-chip dual-pod mesh.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.configs.base import SHAPES
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell, lower_cell
+from repro.launch import roofline as rl
+
+
+def run_cell(arch_id: str, shape: str, multi_pod: bool, verbose: bool = True,
+             opts: frozenset = frozenset(), save_hlo: str | None = None):
+    """Lower + compile one cell. Returns a result dict (or skip record)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    arch_mod = get_arch(arch_id)
+
+    with mesh:
+        cell = build_cell(arch_mod, shape, mesh, opts=opts)
+        if cell is None:
+            reason = arch_mod.SKIPS.get(shape, "n/a")
+            if verbose:
+                print(f"SKIP  {arch_id:24s} {shape:12s} {mesh_name}: {reason}")
+            return {"arch": arch_id, "shape": shape, "mesh": mesh_name,
+                    "status": "skip", "reason": reason}
+
+        t0 = time.time()
+        lowered = lower_cell(cell)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+        mem = compiled.memory_analysis()
+        hlo_text = compiled.as_text()
+        if save_hlo:
+            import gzip, os as _os
+            _os.makedirs(save_hlo, exist_ok=True)
+            tag = "-".join(sorted(opts)) or "base"
+            fn = f"{arch_id}__{shape}__{mesh_name}__{tag}.txt.gz"
+            with gzip.open(_os.path.join(save_hlo, fn), "wt") as f:
+                f.write(hlo_text)
+        kind, S, B = SHAPES[shape]
+        mf = rl.model_flops_estimate(cell.model, kind, S, B)
+        roof = rl.analyze(compiled, hlo_text, arch=arch_id,
+                          shape=shape, mesh_name=mesh_name, chips=chips,
+                          model_flops=mf)
+        row = roof.row()
+        row.update({
+            "status": "ok", "kind": kind, "opts": sorted(opts),
+            "lower_s": round(t1 - t0, 1), "compile_s": round(t2 - t1, 1),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "arg_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "out_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+        })
+        if verbose:
+            print(f"OK    {arch_id:24s} {shape:12s} {mesh_name} "
+                  f"kind={kind:7s} compile={row['compile_s']:6.1f}s "
+                  f"temp/dev={row['temp_bytes_per_device']/2**30:6.2f}GiB "
+                  f"arg/dev={row['arg_bytes_per_device']/2**30:6.2f}GiB "
+                  f"dominant={row['dominant']:10s} "
+                  f"roofline={row['roofline_fraction']:.3f}")
+            print(f"      memory_analysis: {mem}")
+        return row
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--json", default=None, help="append JSONL results here")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="optimisation switches (banded_causal, grouped_moe, moe2d)")
+    ap.add_argument("--save-hlo", default=None,
+                    help="directory for gzipped compiled HLO (re-analysis)")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run needs 512 placeholder devices"
+
+    cells = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    results = []
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp,
+                                            opts=frozenset(args.opt),
+                                            save_hlo=args.save_hlo))
+                except Exception as e:
+                    failures += 1
+                    traceback.print_exc()
+                    results.append({"arch": arch, "shape": shape,
+                                    "mesh": "2x16x16" if mp else "16x16",
+                                    "status": "fail", "error": repr(e)})
+                if args.json:
+                    with open(args.json, "a") as f:
+                        f.write(json.dumps(results[-1]) + "\n")
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skip")
+    print(f"\n=== dry-run: {ok} ok, {sk} skip, {failures} FAIL ===")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

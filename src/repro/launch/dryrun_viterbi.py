@@ -1,0 +1,94 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run for the paper's operator itself on the production meshes:
+
+  * 2-D-sharded FLASH Viterbi (subtask wavefront over `data`, tropical-TP
+    row-sharded DP over `model`) at forced-alignment scale (K=4096 > the
+    paper's K=3965, padded to lane width; T=512);
+  * the batched serving decoder (sequences over `data`) at K=512, T=512,
+    batch=256 — the alignment head behind hubert emissions.
+
+    PYTHONPATH=src python -m repro.launch.dryrun_viterbi [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distributed import (make_flash_viterbi_2d,
+                                    make_batched_flash_decoder)
+from repro.launch.mesh import make_production_mesh
+from repro.launch import roofline as rl
+
+
+def run(multi_pod: bool, json_path: str | None = None, shard: str = "row"):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    chips = 512 if multi_pod else 256
+    rows = []
+
+    with mesh:
+        # --- 2-D sharded FLASH (tropical TP x subtask DP) -----------------
+        K, T = 4096, 512
+        dec = make_flash_viterbi_2d(mesh, T, K, shard=shard)
+        args = (jax.ShapeDtypeStruct((K,), jnp.float32),
+                jax.ShapeDtypeStruct((K, K), jnp.float32),
+                jax.ShapeDtypeStruct((T, K), jnp.float32))
+        t0 = time.time()
+        compiled = dec.lower(*args).compile()
+        dt = time.time() - t0
+        useful = 2.0 * K * K * T  # one (max,+) matvec per step
+        roof = rl.analyze(compiled, compiled.as_text(),
+                          arch=f"flash-viterbi-2d-{shard}", shape=f"K{K}_T{T}",
+                          mesh_name=mesh_name, chips=chips, model_flops=useful)
+        row = roof.row()
+        row.update({"status": "ok", "kind": "viterbi", "compile_s": round(dt, 1)})
+        mem = compiled.memory_analysis()
+        row["temp_bytes_per_device"] = mem.temp_size_in_bytes
+        row["arg_bytes_per_device"] = mem.argument_size_in_bytes
+        print(f"OK  flash-viterbi-2d K={K} T={T} {mesh_name} compile={dt:.1f}s "
+              f"temp/dev={mem.temp_size_in_bytes/2**20:.1f}MiB "
+              f"dominant={row['dominant']} coll={row['coll_detail']}")
+        rows.append(row)
+
+        # --- batched serving decoder --------------------------------------
+        K2, T2, B2 = 512, 512, 256
+        bdec = make_batched_flash_decoder(mesh)
+        args = (jax.ShapeDtypeStruct((K2,), jnp.float32),
+                jax.ShapeDtypeStruct((K2, K2), jnp.float32),
+                jax.ShapeDtypeStruct((B2, T2, K2), jnp.float32))
+        t0 = time.time()
+        compiled = bdec.lower(*args).compile()
+        dt = time.time() - t0
+        useful = 2.0 * K2 * K2 * T2 * B2
+        roof = rl.analyze(compiled, compiled.as_text(),
+                          arch="flash-viterbi-batched", shape=f"B{B2}_K{K2}_T{T2}",
+                          mesh_name=mesh_name, chips=chips, model_flops=useful)
+        row = roof.row()
+        row.update({"status": "ok", "kind": "viterbi", "compile_s": round(dt, 1)})
+        mem = compiled.memory_analysis()
+        row["temp_bytes_per_device"] = mem.temp_size_in_bytes
+        row["arg_bytes_per_device"] = mem.argument_size_in_bytes
+        print(f"OK  flash-viterbi-batched B={B2} K={K2} T={T2} {mesh_name} "
+              f"compile={dt:.1f}s temp/dev={mem.temp_size_in_bytes/2**20:.1f}MiB "
+              f"dominant={row['dominant']}")
+        rows.append(row)
+
+    if json_path:
+        with open(json_path, "a") as f:
+            for r in rows:
+                f.write(json.dumps(r) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--shard", default="row")
+    args = ap.parse_args()
+    run(args.multi_pod, args.json, args.shard)

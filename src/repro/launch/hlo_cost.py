@@ -1,0 +1,297 @@
+"""Trip-count-exact cost analysis of compiled HLO modules.
+
+`compiled.cost_analysis()` counts every while-loop body ONCE — useless for
+scan-over-layers programs (a 60-layer scan undercounts 60x).  This walker
+parses the compiled module text, propagates execution multipliers through the
+call graph using XLA's `known_trip_count` backend configs, and accumulates:
+
+  * flops       — dot ops: 2 * out_elems * contracted_elems; elementwise ops:
+                  1 flop/elem; reduces: input elems.  (Matches XLA's own
+                  per-op model to roofline precision.)
+  * bytes       — HBM traffic under a PERFECT-ELEMENTWISE-FUSION model: only
+                  data-movement-bound ops are charged (dot, gather/scatter,
+                  dynamic slice/update, reduce, sort, copy, concatenate,
+                  collectives), with sliced reads charged at SLICE size (a
+                  scan that dynamic-slices a (B,S,D) tensor per step reads
+                  each element once in total, not T times).  Fusions are
+                  never charged at their boundary; the walker descends and
+                  applies the same rules inside, so pure elementwise fusions
+                  cost nothing (TPU fuses them into neighbouring ops; the
+                  CPU-backend module this walker reads leaves them unfused).
+                  While bodies weighted by trip count.
+  * collectives — per kind, payload bytes weighted by trip count.  Ring-
+                  schedule accounting: all-reduce 2x size, reduce-scatter
+                  counts its (large) input, all-gather/all-to-all/permute
+                  their output.
+
+All totals are PER DEVICE (the compiled module is the SPMD-partitioned
+program); multiply flops by chip count for machine totals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict, deque
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "exponential-minus-one", "log", "log-plus-one",
+    "tanh", "sqrt", "rsqrt", "power", "compare", "and", "or", "xor", "not",
+    "select", "clamp", "sign", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "sine", "cosine", "atan2", "remainder",
+    "shift-left", "shift-right-arithmetic", "shift-right-logical",
+    "is-finite", "logistic", "cbrt", "erf",
+}
+
+_BYTE_SKIP = {"parameter", "constant", "tuple", "get-tuple-element",
+              "bitcast", "after-all", "partition-id", "replica-id", "iota",
+              "while", "conditional", "call"}
+
+# ops charged for HBM traffic (perfect-elementwise-fusion model; see docstring)
+_BYTE_OPS = {"dot", "convolution", "gather", "scatter", "dynamic-slice",
+             "dynamic-update-slice", "reduce", "reduce-window", "sort",
+             "copy", "concatenate", "transpose", "reverse", "pad",
+             "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute", "all-reduce-start", "all-gather-start",
+             "collective-permute-start"}
+
+# a fusion is charged at its boundary only when its body does real data
+# movement (the CPU backend wraps every lone elementwise op in a fusion; those
+# are assumed fused into neighbouring dots on TPU and charged nothing)
+_HARD_OPS = {"gather", "scatter", "dynamic-slice", "dynamic-update-slice",
+             "reduce", "reduce-window", "sort", "concatenate", "transpose",
+             "reverse", "pad", "dot", "convolution", "copy", "slice",
+             "iota"} - {"iota"}
+
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+_SHAPE_ELEM_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%(?P<name>[\w.\-]+)\s*=\s*"
+    r"(?P<shape>\(.*?\)|[\w\[\]{},]+)\s+"
+    r"(?P<opcode>[\w\-]+)\((?P<rest>.*)$")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)\s*\(.*\)\s*->.*{\s*$")
+
+
+def _shape_stats(shape_str: str) -> tuple[int, int]:
+    """(total elements, total bytes) of a shape string (tuples summed)."""
+    elems = bytes_ = 0
+    for dt, dims in _SHAPE_ELEM_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        bytes_ += n * _DTYPE_BYTES[dt]
+    return elems, bytes_
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    shape: str
+    opcode: str
+    rest: str          # operand list + attributes
+    operands: list
+
+    @property
+    def out_stats(self):
+        return _shape_stats(self.shape)
+
+
+def _parse_operands(rest: str) -> list[str]:
+    """Operand %names up to the closing paren at depth 0."""
+    out, depth = [], 0
+    for tok in re.finditer(r"[(),]|%[\w.\-]+", rest):
+        t = tok.group(0)
+        if t == "(":
+            depth += 1
+        elif t == ")":
+            if depth == 0:
+                break
+            depth -= 1
+        elif t.startswith("%") and depth == 0:
+            out.append(t[1:])
+    return out
+
+
+def parse_module(text: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    cur: list[Op] | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line)
+            if m and not line.lstrip().startswith("//"):
+                comps[m.group("name")] = cur = []
+            continue
+        if line.startswith("}") or line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            cur.append(Op(name=m.group("name"), shape=m.group("shape"),
+                          opcode=m.group("opcode"), rest=m.group("rest"),
+                          operands=_parse_operands(m.group("rest"))))
+    return comps
+
+
+def _attr_comp(rest: str, key: str) -> list[str]:
+    out = []
+    for m in re.finditer(key + r"=%([\w.\-]+)", rest):
+        out.append(m.group(1))
+    m = re.search(key + r"={([^}]*)}", rest)
+    if m:
+        out += re.findall(r"%([\w.\-]+)", m.group(1))
+    return out
+
+
+def _trip_count(rest: str) -> int:
+    m = re.search(r'known_trip_count[^\d]*(\d+)', rest)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(op: Op, symtab: dict[str, str]) -> float:
+    out_elems, _ = op.out_stats
+    lhs_shape = symtab.get(op.operands[0], "") if op.operands else ""
+    m = re.search(r"lhs_contracting_dims={([\d,]*)}", op.rest)
+    dims_m = _SHAPE_ELEM_RE.search(lhs_shape)
+    if not m or not dims_m:
+        return 2.0 * out_elems  # conservative fallback
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    contract = 1
+    for i in (int(d) for d in m.group(1).split(",") if d):
+        if i < len(lhs_dims):
+            contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+@dataclasses.dataclass
+class CostSummary:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    unknown_trip_whiles: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def _op_bytes(op: Op, oc: str, out_bytes: int, symtab: dict,
+              hard: dict) -> float:
+    """HBM traffic of one op under the perfect-elementwise-fusion model.
+
+    Sliced/gathered reads touch only the slice (charging the full operand
+    would bill a scan T times for a tensor it reads once in total);
+    dynamic-update-slice writes only the update region.
+    """
+    def in_bytes(idx=None):
+        ops_ = op.operands if idx is None else [op.operands[i]
+                                                for i in idx
+                                                if i < len(op.operands)]
+        return sum(_shape_stats(symtab.get(o, ""))[1] for o in ops_)
+
+    if oc in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * out_bytes                      # read slice + write out
+    if oc == "dynamic-update-slice":
+        return 2.0 * in_bytes([1])                  # read + write the update
+    if oc == "scatter":
+        return 2.0 * in_bytes([2]) + in_bytes([1])  # updates r/w + indices
+    if oc in ("dot", "convolution", "reduce", "reduce-window", "sort", "copy",
+              "concatenate", "transpose", "reverse", "pad") or \
+            oc in _COLLECTIVES or oc.replace("-start", "") in _COLLECTIVES:
+        return out_bytes + in_bytes()
+    return 0.0  # elementwise / fusion boundaries: free under perfect fusion
+
+
+def analyze_text(text: str, entry: str | None = None) -> CostSummary:
+    comps = parse_module(text)
+    if not comps:
+        return CostSummary()
+    hard = {name: any(op.opcode in _HARD_OPS for op in ops)
+            for name, ops in comps.items()}
+    if entry is None:  # entry computation: the one never referenced as callee
+        called = set()
+        for ops in comps.values():
+            for op in ops:
+                for key in ("calls", "body", "condition", "to_apply",
+                            "branch_computations"):
+                    called.update(_attr_comp(op.rest, key))
+        entries = [c for c in comps if c not in called]
+        entry = entries[-1] if entries else next(iter(comps))
+
+    summary = CostSummary()
+    # (comp, multiplier) — byte rules apply inside fusions too (slice-aware)
+    queue: deque[tuple[str, float, bool]] = deque([(entry, 1.0, False)])
+    seen_budget = 0
+    while queue:
+        seen_budget += 1
+        if seen_budget > 200_000:
+            break
+        comp, mult, fused = queue.popleft()
+        ops = comps.get(comp, [])
+        symtab = {op.name: op.shape for op in ops}
+        for op in ops:
+            oc = op.opcode
+            out_elems, out_bytes = op.out_stats
+            # --- flops -------------------------------------------------
+            if oc == "dot":
+                summary.flops += mult * _dot_flops(op, symtab)
+            elif oc in _ELEMENTWISE:
+                summary.flops += mult * out_elems
+            elif oc in ("reduce", "reduce-window"):
+                in_elems = sum(_shape_stats(symtab.get(o, ""))[0]
+                               for o in op.operands[:1])
+                summary.flops += mult * in_elems
+            elif oc == "convolution":
+                summary.flops += mult * 2.0 * out_elems  # none in this code
+            # --- control flow -------------------------------------------
+            if oc == "while":
+                trips = _trip_count(op.rest)
+                if "known_trip_count" not in op.rest:
+                    summary.unknown_trip_whiles += 1
+                for b in _attr_comp(op.rest, "body"):
+                    queue.append((b, mult * trips, fused))
+                for c in _attr_comp(op.rest, "condition"):
+                    queue.append((c, mult * (trips + 1), fused))
+            elif oc == "fusion":
+                for c in _attr_comp(op.rest, "calls"):
+                    queue.append((c, mult, fused))
+            elif oc in ("call", "async-start", "custom-call"):
+                for c in _attr_comp(op.rest, "to_apply") + \
+                        _attr_comp(op.rest, "called_computations"):
+                    queue.append((c, mult, fused))
+            elif oc == "conditional":
+                for c in _attr_comp(op.rest, "branch_computations"):
+                    queue.append((c, mult, fused))
+            # --- collectives ---------------------------------------------
+            base = oc.replace("-start", "")
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                if base == "reduce-scatter":
+                    payload = sum(_shape_stats(symtab.get(o, ""))[1]
+                                  for o in op.operands)
+                elif base == "all-reduce":
+                    payload = 2.0 * out_bytes
+                else:
+                    payload = out_bytes
+                summary.collective_bytes[base] += mult * payload
+            # --- bytes ----------------------------------------------------
+            summary.bytes += mult * _op_bytes(op, oc, out_bytes, symtab, hard)
+    return summary
+
+
+__all__ = ["CostSummary", "analyze_text", "parse_module"]

@@ -1,0 +1,113 @@
+"""Render the §Dry-run and §Roofline tables of EXPERIMENTS.md from the
+dry-run JSONL (recomputing the useful-FLOPs yardstick from configs, so rows
+produced before a yardstick change stay comparable).
+
+    PYTHONPATH=src python -m repro.launch.render_experiments \
+        dryrun_results.jsonl > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.configs import get_arch
+from repro.configs.base import SHAPES
+from repro.launch.model_flops import useful_flops
+from repro.launch.roofline import PEAK_FLOPS, HBM_BW, LINK_BW, LINKS_USED
+from repro.models import build_model
+
+_MODEL_CACHE = {}
+
+
+def fixup(row: dict) -> dict:
+    """Recompute model_flops / useful / fraction from the current yardstick."""
+    if row.get("status") != "ok":
+        return row
+    arch = row["arch"].replace("-", "_").replace(".", "_")
+    if arch not in _MODEL_CACHE:
+        _MODEL_CACHE[arch] = build_model(get_arch(arch).CONFIG)
+    model = _MODEL_CACHE[arch]
+    kind, S, B = SHAPES[row["shape"]]
+    mf = useful_flops(model, kind, S, B)
+    chips = row["chips"]
+    row = dict(row)
+    row["model_flops"] = mf
+    row["useful_ratio"] = mf / (row["hlo_flops"] * chips) if row["hlo_flops"] else 0
+    step = max(row["compute_s"], row["memory_s"], row["collective_s"])
+    row["step_time_s"] = step
+    row["roofline_fraction"] = (mf / (chips * PEAK_FLOPS)) / step if step else 0
+    terms = {"compute": row["compute_s"], "memory": row["memory_s"],
+             "collective": row["collective_s"]}
+    row["dominant"] = max(terms, key=terms.get)
+    return row
+
+
+def gib(x):
+    return f"{x / 2**30:.2f}"
+
+
+def render(path: str, mesh_filter: str | None = None):
+    rows = [fixup(json.loads(l)) for l in open(path)]
+    # keep the last entry per (arch, shape, mesh)
+    dedup = {}
+    for r in rows:
+        dedup[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = list(dedup.values())
+
+    out = []
+    out.append("| arch | shape | mesh | kind | compile s | args GiB/dev | "
+               "temp GiB/dev | collectives |")
+    out.append("|---|---|---|---|---|---|---|---|")
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] == "skip":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"SKIP | — | — | — | {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | FAIL "
+                       f"| — | — | — | {r.get('error','')[:60]} |")
+            continue
+        coll = ", ".join(f"{k.split('-')[-1]}:{v/2**30:.2f}G"
+                         for k, v in sorted(r["coll_detail"].items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+            f"| {r['compile_s']} | {gib(r['arg_bytes_per_device'])} "
+            f"| {gib(r['temp_bytes_per_device'])} | {coll or '—'} |")
+    dry = "\n".join(out)
+
+    out = []
+    out.append("| arch | shape | compute s | memory s | coll s | dominant | "
+               "useful | roofline frac | note |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    singles = [r for r in rows if r["status"] == "ok" and r["mesh"] == "16x16"]
+    for r in sorted(singles, key=lambda r: (r["arch"], r["shape"])):
+        note = _note(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} "
+            f"| {r['memory_s']:.3f} | {r['collective_s']:.3f} "
+            f"| **{r['dominant']}** | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.3f} | {note} |")
+    roof = "\n".join(out)
+    return dry, roof, rows
+
+
+def _note(r) -> str:
+    if r["dominant"] == "compute" and r["useful_ratio"] < 0.6:
+        return "compute waste: causal-masked full blocks / remat — skip masked KV blocks"
+    if r["dominant"] == "memory" and r["kind"] == "decode":
+        return "weight+cache streaming bound — batch more streams or quantize"
+    if r["dominant"] == "memory":
+        return "activation traffic — fuse/enlarge blocks, check remat policy"
+    if r["dominant"] == "collective":
+        return "MoE dispatch + TP all-reduce — group-local routing / overlap"
+    return ""
+
+
+if __name__ == "__main__":
+    dry, roof, rows = render(sys.argv[1] if len(sys.argv) > 1
+                             else "dryrun_results.jsonl")
+    print("## Dry-run\n")
+    print(dry)
+    print("\n## Roofline (single pod 16x16)\n")
+    print(roof)

@@ -1,0 +1,164 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware required).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = sum over collective ops of operand bytes
+                      / (chips x 50e9 B/s x links)
+
+HLO_FLOPs / HLO_bytes / collective bytes come from the trip-count-exact HLO
+walker (hlo_cost.py) over the compiled module text — `compiled.cost_analysis()`
+itself counts while bodies once, which undercounts scan-over-layers programs by
+the layer count, so it is only kept as a cross-check field.  All walker totals
+are per-device (the module is SPMD-partitioned).  The link-count heuristic: a
+TPU v5e chip has ~4 usable ICI links at ~50 GB/s each; we charge collectives
+against 2 links (one ring dimension in, one out) — documented, conservative,
+and constant across cells so comparisons stay meaningful.
+
+MODEL_FLOPS uses 6*N*D (train) / 2*N*D (inference) with N = active params.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+LINKS_USED = 2
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]+?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output bytes per collective kind from compiled HLO text."""
+    out: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        if m.group(0).rstrip().endswith("-done("):
+            continue  # start/done pairs: count the start only
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All hlo_* fields are PER DEVICE (SPMD-partitioned module)."""
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float
+    hlo_bytes: float
+    coll_bytes: dict
+    model_flops: float            # GLOBAL useful flops (6ND / 2ND)
+    bytes_per_device: float       # allocation footprint (memory_analysis)
+    xla_cost_flops: float = 0.0   # raw cost_analysis() cross-check
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return sum(self.coll_bytes.values()) / (LINK_BW * LINKS_USED)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self) -> float:
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bound:
+        (useful FLOP time per chip) / (roofline step time)."""
+        useful_s = self.model_flops / (self.chips * PEAK_FLOPS)
+        return useful_s / self.step_time_s if self.step_time_s else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "coll_bytes": sum(self.coll_bytes.values()),
+            "coll_detail": dict(self.coll_bytes),
+            "model_flops": self.model_flops,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "bytes_per_device": self.bytes_per_device,
+        }
+
+
+def model_flops_estimate(model, kind: str, seq_len: int, batch: int) -> float:
+    """Useful work: 6ND/2ND (active params) + attention matmuls — see
+    launch/model_flops.py for the per-family attention terms."""
+    from repro.launch.model_flops import useful_flops
+    return useful_flops(model, kind, seq_len, batch)
+
+
+def analyze(compiled, hlo_text: str, *, arch: str, shape: str, mesh_name: str,
+            chips: int, model_flops: float) -> Roofline:
+    from repro.launch import hlo_cost
+    summary = hlo_cost.analyze_text(hlo_text)
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    mem = compiled.memory_analysis()
+    per_dev = float(getattr(mem, "argument_size_in_bytes", 0) +
+                    getattr(mem, "output_size_in_bytes", 0) +
+                    getattr(mem, "temp_size_in_bytes", 0))
+    return Roofline(arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+                    hlo_flops=summary.flops, hlo_bytes=summary.bytes,
+                    coll_bytes=dict(summary.collective_bytes),
+                    model_flops=model_flops, bytes_per_device=per_dev,
+                    xla_cost_flops=float(cost.get("flops", 0.0)))
+
+
+__all__ = ["Roofline", "collective_bytes", "analyze", "model_flops_estimate",
+           "PEAK_FLOPS", "HBM_BW", "LINK_BW", "LINKS_USED"]

@@ -1,0 +1,135 @@
+"""Build the jitted step for one (arch x shape x mesh) dry-run cell.
+
+Shared by dryrun.py (lower+compile), roofline.py (cost/memory analysis) and
+train.py (the real thing).  Given an arch module and a shape name this
+constructs:
+  * the step function (train_step / prefill / serve_step),
+  * abstract example args (ShapeDtypeStruct — nothing is allocated),
+  * in/out shardings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import build_model
+from repro.sharding.rules import MULTI_POD_RULES, SINGLE_POD_RULES
+from repro.train import (TrainConfig, abstract_train_state, make_train_step,
+                         train_state_specs)
+from repro.launch.mesh import data_axis_size
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    fn: Callable            # jit-able step
+    args: tuple             # abstract args (ShapeDtypeStructs)
+    in_shardings: tuple
+    out_shardings: Any
+    donate: tuple = ()
+    model: Any = None
+
+
+def _sharding_tree(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch_mod, shape: str, mesh: Mesh,
+               tcfg: TrainConfig | None = None,
+               config_override=None, opts: frozenset = frozenset()) -> Cell | None:
+    """Returns the Cell for (arch, shape) on this mesh, or None if skipped.
+
+    opts — the §Perf optimisation switches (baseline has none):
+      banded_causal — 4-band causal KV skipping (compute term)
+      grouped_moe   — group-local MoE routing (collective term)
+      moe2d         — 2-D expert-weight sharding (memory term, decode)
+    """
+    multi_pod = "pod" in mesh.shape
+    spec = arch_mod.input_specs(shape, multi_pod=multi_pod)
+    if spec is None:
+        return None
+    cfg = config_override or arch_mod.CONFIG
+    if "banded_causal" in opts:
+        cfg = dataclasses.replace(cfg, causal_schedule="banded")
+    if "grouped_moe" in opts and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, num_groups=32))
+    model = build_model(cfg)
+    rules = MULTI_POD_RULES if multi_pod else SINGLE_POD_RULES
+    if "moe2d" in opts:
+        rules = dataclasses.replace(
+            rules, rules={**rules.rules, "expert_ff": "data"})
+    arch_name = cfg.name
+
+    if spec.kind == "train":
+        tcfg = tcfg or TrainConfig()
+        step = make_train_step(model, tcfg)
+        state = abstract_train_state(model)
+        state_specs = train_state_specs(model, rules, data_axis_size(mesh))
+        state_sh = _sharding_tree(mesh, state_specs)
+        batch_sh = _sharding_tree(mesh, spec.shardings["batch"])
+        out_sh = (state_sh, {"loss": NamedSharding(mesh, P()),
+                             "grad_norm": NamedSharding(mesh, P()),
+                             "lr": NamedSharding(mesh, P())})
+        return Cell(arch=arch_name, shape=shape, kind="train",
+                    fn=step, args=(state, spec.args["batch"]),
+                    in_shardings=(state_sh, batch_sh), out_shardings=out_sh,
+                    donate=(0,), model=model)
+
+    params = model.abstract_params()
+    pspecs = model.param_specs(rules)
+    params_sh = _sharding_tree(mesh, pspecs)
+
+    batch_axes = rules.axis("batch")
+    logits_sh = NamedSharding(mesh, P(batch_axes, None, None))
+
+    if spec.kind == "prefill":
+        def prefill(params, batch):
+            logits, cache = model.prefill(params, batch)
+            return logits, cache
+        batch_sh = _sharding_tree(mesh, spec.shardings["batch"])
+        if getattr(cfg, "encoder_only", False):
+            out_sh = (logits_sh, None)  # encoder: emissions only, no cache
+        else:
+            # prefill cache shardings == decode cache shardings (ring-aligned)
+            cache_sh = _sharding_tree(mesh, model.cache_specs(rules))
+            out_sh = (logits_sh, cache_sh)
+        return Cell(arch=arch_name, shape=shape, kind="prefill",
+                    fn=prefill, args=(params, spec.args["batch"]),
+                    in_shardings=(params_sh, batch_sh),
+                    out_shardings=out_sh, model=model)
+
+    # decode: serve_step(params, tokens, cache) -> (logits, cache)
+    def serve_step(params, tokens, cache):
+        return model.decode_step(params, tokens, cache)
+
+    # long_500k (batch=1) replicates batch: rebuild rules the same way
+    if spec.batch == 1:
+        rules = dataclasses.replace(rules, rules={**rules.rules, "batch": None})
+        logits_sh = NamedSharding(mesh, P(None, None, None))
+    cache_sh = _sharding_tree(mesh, spec.shardings["cache"])
+    tok_sh = NamedSharding(mesh, spec.shardings["tokens"])
+    return Cell(arch=arch_name, shape=shape, kind="decode",
+                fn=serve_step,
+                args=(params, spec.args["tokens"], spec.args["cache"]),
+                in_shardings=(params_sh, tok_sh, cache_sh),
+                out_shardings=(logits_sh, cache_sh), donate=(2,), model=model)
+
+
+def lower_cell(cell: Cell):
+    jitted = jax.jit(cell.fn, in_shardings=cell.in_shardings,
+                     out_shardings=cell.out_shardings,
+                     donate_argnums=cell.donate)
+    return jitted.lower(*cell.args)
+
+
+__all__ = ["Cell", "build_cell", "lower_cell"]

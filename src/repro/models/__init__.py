@@ -1,0 +1,9 @@
+"""Pure-JAX model zoo (no flax): transformers, Griffin, xLSTM."""
+
+from .transformer import ModelConfig, TransformerLM
+from .hybrid import GriffinLM, XLSTMLM
+from .moe import MoEConfig
+from .registry import build_model
+
+__all__ = ["ModelConfig", "TransformerLM", "GriffinLM", "XLSTMLM",
+           "MoEConfig", "build_model"]

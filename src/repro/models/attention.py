@@ -1,0 +1,423 @@
+"""Attention: GQA/MQA, sliding-window/local, encoder (bidirectional), MLA.
+
+All full-sequence paths (train + prefill) go through `blockwise_attention` — an
+online-softmax flash-attention formulation as nested `lax.scan`s, so the (S, S)
+score matrix is never materialised (mandatory at the 32k prefill shapes).  KV
+can be supplied in *latent* form with a per-block expansion callback, which is
+how MLA (DeepSeek-V2) prefill expands its compressed KV inside the scan without
+ever materialising the full expanded KV tensor.
+
+Decode paths attend a KV cache directly (a single query position makes the
+score tensor (B, H, 1, S) — small).  Caches are ring buffers: sliding-window
+layers allocate only `window` slots, which is what makes the 500k-context
+decode cells for SWA/hybrid archs cache-bounded instead of length-bounded.
+MLA decode uses the absorbed form (latent-space attention) so the cache holds
+only (kv_lora + rope_dim) floats per token — the paper-analogous memory win.
+
+Baseline causal handling computes all KV blocks with masking (2x FLOP waste on
+strictly-causal cells); see EXPERIMENTS.md §Perf for the optimised schedule.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .common import Layout, apply_rope, rms_norm
+
+_MASK_VALUE = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int | None = None          # sliding-window size (None = full)
+    rope_theta: float = 10000.0
+    use_rope: bool = True
+    q_block: int = 512
+    kv_block: int = 1024
+    # MLA (None = standard attention)
+    q_lora: int | None = None
+    kv_lora: int | None = None
+    rope_head_dim: int = 64
+    v_head_dim: int | None = None
+    causal_schedule: str = "full"      # "banded": skip future KV bands
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+def attn_layout(cfg: AttnConfig) -> Layout:
+    d, h, hk, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    if cfg.kv_lora is not None:
+        dn, dr = cfg.head_dim, cfg.rope_head_dim
+        dv = cfg.v_head_dim or cfg.head_dim
+        lay: Layout = {
+            "wq_a": ((d, cfg.q_lora), ("model_d", None), "normal"),
+            "q_norm": ((cfg.q_lora,), (None,), "zeros"),
+            "wq_b": ((cfg.q_lora, h * (dn + dr)), (None, "heads"), "normal"),
+            "w_dkv": ((d, cfg.kv_lora + dr), ("model_d", None), "normal"),
+            "kv_norm": ((cfg.kv_lora,), (None,), "zeros"),
+            "w_uk": ((cfg.kv_lora, h * dn), (None, "heads"), "normal"),
+            "w_uv": ((cfg.kv_lora, h * dv), (None, "heads"), "normal"),
+            "wo": ((h * dv, d), ("heads", "model_d"), "normal"),
+        }
+        return lay
+    kv_axis = "kv_heads" if hk > 1 else None  # MQA kv proj too small to shard
+    return {
+        "wq": ((d, h * hd), ("model_d", "heads"), "normal"),
+        "wk": ((d, hk * hd), ("model_d", kv_axis), "normal"),
+        "wv": ((d, hk * hd), ("model_d", kv_axis), "normal"),
+        "wo": ((h * hd, d), ("heads", "model_d"), "normal"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention
+# ---------------------------------------------------------------------------
+
+def blockwise_attention(q, kv_latent, expand_fn: Callable, *, causal: bool,
+                        window: int | None, q_offset, kv_positions,
+                        q_block: int, kv_block: int, scale: float):
+    """Online-softmax attention over latent KV blocks.
+
+    q:          (B, S, H, hd_k) queries (rope already applied).
+    kv_latent:  pytree of (B, Skv, *) latent KV streams (for plain GQA the
+                tuple (k, v); for MLA (c_kv, k_pe)).  Kept as separate leaves
+                so tensor-parallel sharding never straddles a concat boundary
+                (a packed tensor would reshard inside the scan every block).
+    expand_fn:  pytree of (B, kb, *) -> (k (B, kb, H, hd_k), v (B, kb, H, hd_v)).
+    kv_positions: (Skv,) int32 position of each kv slot (-1 = invalid slot).
+
+    Returns (B, S, H, hd_v).
+    """
+    B, S, H, hd_k = q.shape
+    Skv = jax.tree_util.tree_leaves(kv_latent)[0].shape[1]
+    nq, nkv = S // q_block, Skv // kv_block
+
+    q_r = q.reshape(B, nq, q_block, H, hd_k).swapaxes(0, 1)   # (nq, B, qb, H, dk)
+    kv_r = jax.tree_util.tree_map(
+        lambda a: a.reshape(B, nkv, kv_block, -1).swapaxes(0, 1), kv_latent)
+    kpos_r = kv_positions.reshape(nkv, kv_block)
+
+    def q_body(_, xs):
+        qi, qb = xs                                            # index, (B,qb,H,dk)
+        qpos = q_offset + qi * q_block + jnp.arange(q_block)   # (qb,)
+
+        def kv_body(carry, kv_xs):
+            m, l, acc = carry
+            kv_b, kpos = kv_xs                                 # (B,kb,L), (kb,)
+            k, v = expand_fn(kv_b)                             # (B,kb,H,dk/dv)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf(qb), qf(k)) * scale
+            valid = kpos[None, :] >= 0
+            if causal:
+                valid &= qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                valid &= (qpos[:, None] - kpos[None, :]) < window
+            s = jnp.where(valid[None, None, :, :], s, _MASK_VALUE)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = corr * l + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bkhd->bqhd", p, qf(v))
+            acc_new = corr.transpose(0, 2, 1)[..., None] * acc + pv
+            return (m_new, l_new, acc_new), None
+
+        hd_v = jax.eval_shape(
+            expand_fn, jax.tree_util.tree_map(lambda a: a[0], kv_r))[1].shape[-1]
+        init = (jnp.full((B, H, q_block), -jnp.inf, jnp.float32),
+                jnp.zeros((B, H, q_block), jnp.float32),
+                jnp.zeros((B, q_block, H, hd_v), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_body, init, (kv_r, kpos_r))
+        out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+        return None, out
+
+    # flash-attention-style remat: recompute each q-block's kv scan in the
+    # backward pass instead of saving every (B, H, qb, kb) probability block
+    q_body = jax.checkpoint(q_body)
+    _, out = jax.lax.scan(q_body, None,
+                          (jnp.arange(nq), q_r))
+    return out.swapaxes(0, 1).reshape(B, S, H, -1)
+
+
+def qf(x):
+    return x.astype(jnp.float32)
+
+
+def banded_blockwise(q, kv_latent, expand_fn, *, window, q_offset,
+                     kv_positions, q_block: int, kv_block: int, scale: float,
+                     bands: int = 4):
+    """Causal attention with future-KV-band skipping.
+
+    The baseline scans ALL kv blocks per q block and masks (2x FLOP waste for
+    strictly-causal cells).  Splitting queries into `bands` groups, group g
+    only scans kv[: (g+1) * S/bands]: executed score FLOPs drop from S^2 to
+    S^2 * (bands+1) / (2*bands)  (1.25x waste at bands=4 instead of 2x),
+    with `bands` x the HLO body size — the compute/compile-size knob of
+    EXPERIMENTS.md §Perf.
+    """
+    B, S, H, dk = q.shape
+    if S % bands or (S // bands) % q_block:
+        bands = 1
+    Sb = S // bands
+    outs = []
+    for g in range(bands):
+        q_g = q[:, g * Sb:(g + 1) * Sb]
+        end = (g + 1) * Sb
+        lat_g = jax.tree_util.tree_map(lambda a: a[:, :end], kv_latent)
+        outs.append(blockwise_attention(
+            q_g, lat_g, expand_fn, causal=True, window=window,
+            q_offset=q_offset + g * Sb, kv_positions=kv_positions[:end],
+            q_block=min(q_block, Sb), kv_block=min(kv_block, end),
+            scale=scale))
+    return jnp.concatenate(outs, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA/MQA) attention
+# ---------------------------------------------------------------------------
+
+def _split_heads(x, n, hd):
+    B, S, _ = x.shape
+    return x.reshape(B, S, n, hd)
+
+
+def gqa_forward(params, x, positions, cfg: AttnConfig):
+    """Full-sequence GQA attention (train / prefill). Returns (out, kv_packed).
+
+    kv_packed (B, S, Hkv*hd*2) is what prefill stores into the cache.
+    """
+    B, S, _ = x.shape
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _split_heads(x @ params["wq"], h, hd)
+    k = _split_heads(x @ params["wk"], hk, hd)
+    v = _split_heads(x @ params["wv"], hk, hd)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    k_flat = k.reshape(B, S, hk * hd)
+    v_flat = v.reshape(B, S, hk * hd)
+    g = h // hk
+
+    def expand(kv_b):
+        k_b, v_b = kv_b
+        kb = k_b.shape[1]
+        k_b = k_b.reshape(B, kb, hk, 1, hd)
+        v_b = v_b.reshape(B, kb, hk, 1, hd)
+        k_b = jnp.broadcast_to(k_b, (B, kb, hk, g, hd)).reshape(B, kb, h, hd)
+        v_b = jnp.broadcast_to(v_b, (B, kb, hk, g, hd)).reshape(B, kb, h, hd)
+        return k_b, v_b
+
+    qb = min(cfg.q_block, S)
+    kb = min(cfg.kv_block, S)
+    if cfg.causal_schedule == "banded" and cfg.causal and S >= 4 * qb:
+        out = banded_blockwise(
+            q, (k_flat, v_flat), expand, window=cfg.window,
+            q_offset=positions[0], kv_positions=positions,
+            q_block=qb, kv_block=kb, scale=1.0 / math.sqrt(hd))
+    else:
+        out = blockwise_attention(
+            q, (k_flat, v_flat), expand, causal=cfg.causal, window=cfg.window,
+            q_offset=positions[0], kv_positions=positions,
+            q_block=qb, kv_block=kb, scale=1.0 / math.sqrt(hd))
+    out = out.astype(x.dtype).reshape(B, S, h * hd)
+    return out @ params["wo"], {"k": k_flat, "v": v_flat}
+
+
+def gqa_decode(params, x, cache, cfg: AttnConfig):
+    """Single-position decode against a ring-buffer cache.
+
+    cache: {"k"/"v": (B, C, Hkv*hd), "pos": (C,) int32 slot positions,
+            "next": () int32 next absolute position}.  k and v are separate
+    entries so kv-head sharding never crosses the k/v boundary (a packed
+    cache would turn the k/v split into a cache-sized collective-permute).
+    """
+    B, S, _ = x.shape  # S == 1
+    h, hk, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    pos = cache["next"]
+    positions = pos[None] + jnp.arange(S)
+
+    q = _split_heads(x @ params["wq"], h, hd)
+    k = _split_heads(x @ params["wk"], hk, hd)
+    v = _split_heads(x @ params["wv"], hk, hd)
+    if cfg.use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    C = cache["k"].shape[1]
+    slot = pos % C
+    k_c = jax.lax.dynamic_update_slice(cache["k"], k.reshape(B, S, hk * hd),
+                                       (0, slot, 0))
+    v_c = jax.lax.dynamic_update_slice(cache["v"], v.reshape(B, S, hk * hd),
+                                       (0, slot, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["pos"], positions.astype(jnp.int32),
+                                        (slot,))
+
+    k_all = k_c.reshape(B, C, hk, hd)
+    v_all = v_c.reshape(B, C, hk, hd)
+    g = h // hk
+    qg = q.reshape(B, S, hk, g, hd)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf(qg), qf(k_all)) / math.sqrt(hd)
+
+    valid = kpos[None, :] >= 0
+    valid &= positions[:, None] >= kpos[None, :]
+    if cfg.window is not None:
+        valid &= (positions[:, None] - kpos[None, :]) < cfg.window
+    s = jnp.where(valid[None, None, None, :, :], s, _MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, qf(v_all))
+    out = out.astype(x.dtype).reshape(B, S, h * hd)
+    new_cache = {"k": k_c, "v": v_c, "pos": kpos, "next": pos + S}
+    return out @ params["wo"], new_cache
+
+
+def gqa_init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    C = min(max_len, cfg.window) if cfg.window else max_len
+    kv_shape = (batch, C, cfg.num_kv_heads * cfg.head_dim)
+    return {"k": jnp.zeros(kv_shape, dtype), "v": jnp.zeros(kv_shape, dtype),
+            "pos": jnp.full((C,), -1, jnp.int32),
+            "next": jnp.zeros((), jnp.int32)}
+
+
+def gqa_prefill_cache(cfg: AttnConfig, kv, positions, max_len: int):
+    """Build a decode cache from prefill outputs (window-trimmed).
+
+    kv: {"k": (B, S, Hkv*hd), "v": ...}.  Prefill always starts at position 0,
+    so the ring alignment shift is a *static* int (a traced roll would lower
+    to a full-cache gather)."""
+    B, S, _ = kv["k"].shape
+    C = min(max_len, cfg.window) if cfg.window else max_len
+    if S >= C:  # keep last C entries, ring-aligned so slot == pos % C
+        start = S - C
+        shift = start % C
+        trim = lambda a: a[:, start:, :]
+        if shift:
+            trim = lambda a: jnp.roll(a[:, start:, :], shift=shift, axis=1)
+        k, v = trim(kv["k"]), trim(kv["v"])
+        kpos = (start + jnp.arange(C)).astype(jnp.int32)
+        if shift:
+            kpos = jnp.roll(kpos, shift=shift, axis=0)
+    else:
+        pad = lambda a: jnp.pad(a, ((0, 0), (0, C - S), (0, 0)))
+        k, v = pad(kv["k"]), pad(kv["v"])
+        kpos = jnp.concatenate([jnp.arange(S, dtype=jnp.int32),
+                                jnp.full((C - S,), -1, jnp.int32)])
+    return {"k": k, "v": v, "pos": kpos, "next": jnp.asarray(S, jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_forward(params, x, positions, cfg: AttnConfig):
+    """Full-sequence MLA (train / prefill): per-block KV expansion.
+
+    Returns (out, latent (B, S, kv_lora + rope_hd)) — the latent stream is the
+    decode cache content.
+    """
+    B, S, _ = x.shape
+    h, dn = cfg.num_heads, cfg.head_dim
+    dr, dv = cfg.rope_head_dim, (cfg.v_head_dim or cfg.head_dim)
+    kvl = cfg.kv_lora
+
+    ql = rms_norm(x @ params["wq_a"], params["q_norm"])
+    qall = (ql @ params["wq_b"]).reshape(B, S, h, dn + dr)
+    q_nope, q_pe = qall[..., :dn], qall[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    dkv = x @ params["w_dkv"]                       # (B, S, kvl + dr)
+    c_kv = rms_norm(dkv[..., :kvl], params["kv_norm"])
+    k_pe = apply_rope(dkv[..., None, kvl:], positions, cfg.rope_theta)[:, :, 0]
+
+    def expand(lat_b):
+        c, pe = lat_b
+        kb = c.shape[1]
+        k_nope = (c @ params["w_uk"]).reshape(B, kb, h, dn)
+        v = (c @ params["w_uv"]).reshape(B, kb, h, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(pe[:, :, None, :], (B, kb, h, dr))], -1)
+        return k, v
+
+    q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+    qb = min(cfg.q_block, S)
+    kb = min(cfg.kv_block, S)
+    if cfg.causal_schedule == "banded" and cfg.causal and S >= 4 * qb:
+        out = banded_blockwise(
+            q_full, (c_kv, k_pe), expand, window=cfg.window,
+            q_offset=positions[0], kv_positions=positions,
+            q_block=qb, kv_block=kb, scale=1.0 / math.sqrt(dn + dr))
+    else:
+        out = blockwise_attention(
+            q_full, (c_kv, k_pe), expand, causal=cfg.causal, window=cfg.window,
+            q_offset=positions[0], kv_positions=positions,
+            q_block=qb, kv_block=kb, scale=1.0 / math.sqrt(dn + dr))
+    out = out.astype(x.dtype).reshape(B, S, h * dv)
+    return out @ params["wo"], jnp.concatenate([c_kv, k_pe], axis=-1)
+
+
+def mla_decode(params, x, cache, cfg: AttnConfig):
+    """Absorbed-form MLA decode: attention in latent space; cache is
+    (kv_lora + rope_hd) floats per token (the MLA memory win)."""
+    B, S, _ = x.shape
+    h, dn = cfg.num_heads, cfg.head_dim
+    dr, dv = cfg.rope_head_dim, (cfg.v_head_dim or cfg.head_dim)
+    kvl = cfg.kv_lora
+    pos = cache["next"]
+    positions = pos[None] + jnp.arange(S)
+
+    ql = rms_norm(x @ params["wq_a"], params["q_norm"])
+    qall = (ql @ params["wq_b"]).reshape(B, S, h, dn + dr)
+    q_nope, q_pe = qall[..., :dn], qall[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    dkv = x @ params["w_dkv"]
+    c_kv = rms_norm(dkv[..., :kvl], params["kv_norm"])
+    k_pe = apply_rope(dkv[..., None, kvl:], positions, cfg.rope_theta)[:, :, 0]
+    latent_new = jnp.concatenate([c_kv, k_pe], axis=-1)
+
+    C = cache["latent"].shape[1]
+    slot = pos % C
+    lat = jax.lax.dynamic_update_slice(cache["latent"], latent_new, (0, slot, 0))
+    kpos = jax.lax.dynamic_update_slice(cache["pos"], positions.astype(jnp.int32),
+                                        (slot,))
+
+    # absorb W_uk into q: q_eff[b,s,h,kvl] = q_nope . W_uk_h^T
+    w_uk = params["w_uk"].reshape(kvl, h, dn)
+    q_eff = jnp.einsum("bshd,khd->bshk", qf(q_nope), qf(w_uk))  # k = kvl
+    s_lat = jnp.einsum("bshk,bck->bhsc", q_eff, qf(lat[..., :kvl]))
+    s_pe = jnp.einsum("bshd,bcd->bhsc", qf(q_pe), qf(lat[..., kvl:]))
+    s = (s_lat + s_pe) / math.sqrt(dn + dr)
+
+    valid = (kpos[None, :] >= 0) & (positions[:, None] >= kpos[None, :])
+    s = jnp.where(valid[None, None, :, :], s, _MASK_VALUE)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhsc,bck->bshk", p, qf(lat[..., :kvl]))   # latent ctx
+    w_uv = params["w_uv"].reshape(kvl, h, dv)
+    out = jnp.einsum("bshk,khd->bshd", ctx, qf(w_uv))
+    out = out.astype(x.dtype).reshape(B, S, h * dv)
+    new_cache = {"latent": lat, "pos": kpos, "next": pos + S}
+    return out @ params["wo"], new_cache
+
+
+def mla_init_cache(cfg: AttnConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    return {"latent": jnp.zeros((batch, max_len, cfg.kv_lora + cfg.rope_head_dim),
+                                dtype),
+            "pos": jnp.full((max_len,), -1, jnp.int32),
+            "next": jnp.zeros((), jnp.int32)}
+
+
+__all__ = [
+    "AttnConfig", "attn_layout", "blockwise_attention",
+    "gqa_forward", "gqa_decode", "gqa_init_cache", "gqa_prefill_cache",
+    "mla_forward", "mla_decode", "mla_init_cache",
+]

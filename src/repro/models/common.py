@@ -1,0 +1,193 @@
+"""Shared pure-JAX model building blocks: param tables, norms, MLPs, rotary.
+
+No flax/haiku — parameters are nested dicts of arrays, created from *layout
+tables* `{name: (shape, logical_axes, init_kind)}`.  The same table yields the
+init values, the PartitionSpec tree (via sharding.rules), and the parameter
+count, so the three can never drift apart.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.rules import ShardingRules
+
+Layout = dict  # {name: (shape, logical_axes, init_kind) | nested Layout}
+
+
+# ---------------------------------------------------------------------------
+# Param tables
+# ---------------------------------------------------------------------------
+
+def _init_array(key, shape, kind: str, dtype):
+    if kind == "zeros":
+        return jnp.zeros(shape, dtype)
+    if kind == "ones":
+        return jnp.ones(shape, dtype)
+    if kind == "normal":
+        fan_in = shape[0] if len(shape) > 1 else shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, shape) * scale).astype(dtype)
+    if kind == "embed":
+        return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+    if kind == "rglru_a":  # see rglru.py: softplus^-1 spaced for stable decay
+        lo, hi = 0.9, 0.999
+        u = np.linspace(lo, hi, shape[-1])
+        val = np.log(np.expm1(-np.log(u) / (8.0 / 256)))  # inverse softplus
+        return jnp.broadcast_to(jnp.asarray(val, dtype), shape)
+    raise ValueError(f"unknown init kind {kind!r}")
+
+
+def init_params(key: jax.Array, layout: Layout, dtype=jnp.bfloat16):
+    """Materialise a parameter pytree from a layout table."""
+    flat = []
+
+    def count(l):
+        return sum(count(v) if isinstance(v, dict) else 1 for v in l.values())
+
+    keys = iter(jax.random.split(key, max(count(layout), 1)))
+
+    def build(l):
+        out = {}
+        for name, val in l.items():
+            if isinstance(val, dict):
+                out[name] = build(val)
+            else:
+                shape, _, kind = val
+                out[name] = _init_array(next(keys), shape, kind, dtype)
+        return out
+
+    return build(layout)
+
+
+def abstract_params(layout: Layout, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree (for dry-run lowering without allocation)."""
+    def build(l):
+        return {name: (build(v) if isinstance(v, dict)
+                       else jax.ShapeDtypeStruct(v[0], dtype))
+                for name, v in l.items()}
+    return build(layout)
+
+
+def param_specs(rules: ShardingRules, layout: Layout):
+    def build(l):
+        return {name: (build(v) if isinstance(v, dict)
+                       else rules.spec(*v[1]))
+                for name, v in l.items()}
+    return build(layout)
+
+
+def param_count(layout: Layout) -> int:
+    def cnt(l):
+        return sum(cnt(v) if isinstance(v, dict) else int(np.prod(v[0]))
+                   for v in l.values())
+    return cnt(layout)
+
+
+# ---------------------------------------------------------------------------
+# Core ops
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": lambda x: jax.nn.gelu(x, approximate=True),
+            "relu": jax.nn.relu}[name]
+
+
+def glu_mlp(params, x, act: str = "silu"):
+    """Gated MLP (SwiGLU/GeGLU): (x W_g * act) * (x W_i) W_o."""
+    g = act_fn(act)(x @ params["wg"])
+    h = g * (x @ params["wi"])
+    return h @ params["wo"]
+
+
+def mlp(params, x, act: str = "gelu"):
+    return act_fn(act)(x @ params["wi"]) @ params["wo"]
+
+
+def glu_mlp_layout(d: int, f: int) -> Layout:
+    return {"wg": ((d, f), ("model_d", "ff"), "normal"),
+            "wi": ((d, f), ("model_d", "ff"), "normal"),
+            "wo": ((f, d), ("ff", "model_d"), "normal")}
+
+
+def mlp_layout(d: int, f: int) -> Layout:
+    return {"wi": ((d, f), ("model_d", "ff"), "normal"),
+            "wo": ((f, d), ("ff", "model_d"), "normal")}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                      # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(logits_fn, hidden, embed_t, targets, mask,
+                          chunk: int = 512):
+    """CE over huge vocabularies without materialising (B, S, V) at once.
+
+    hidden: (B, S, D); embed_t: (D, V) output head; targets/mask: (B, S).
+    Scans over sequence chunks; each chunk's logits live only inside the scan
+    body, bounding live logits at (B, chunk, V_shard).
+    """
+    B, S, D = hidden.shape
+    n = S // chunk
+    h = hidden.reshape(B, n, chunk, D).swapaxes(0, 1)        # (n, B, c, D)
+    t = targets.reshape(B, n, chunk).swapaxes(0, 1)
+    m = mask.reshape(B, n, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        hs, ts, ms = xs
+        logits = logits_fn(hs @ embed_t)                     # (B, c, V) f32
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ts[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * ms
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(ms)), None
+
+    body = jax.checkpoint(body)  # recompute chunk logits in backward
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (h, t, m))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+__all__ = [
+    "Layout", "init_params", "abstract_params", "param_specs", "param_count",
+    "rms_norm", "layer_norm", "act_fn", "glu_mlp", "mlp", "glu_mlp_layout",
+    "mlp_layout", "rope_frequencies", "apply_rope", "chunked_cross_entropy",
+]

@@ -1,0 +1,351 @@
+"""Hybrid/recurrent model stacks: Griffin (RecurrentGemma) and xLSTM.
+
+Same Model API as TransformerLM.  Layer pattern is expressed as repeating
+*units* that are scanned (RecurrentGemma: (rec, rec, local-attn) x 8 + 2 tail
+rec layers for 26; xLSTM-350m: (mLSTM, sLSTM) x 12 for 24), so compile time
+stays flat in depth while preserving the exact interleaving order.
+
+Both families are sub-quadratic (recurrent state is O(1) in sequence length;
+local attention caches only its window), which is why they carry the
+long_500k decode cells.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Layout, init_params, abstract_params, param_specs,
+                     param_count, rms_norm, glu_mlp, glu_mlp_layout,
+                     chunked_cross_entropy)
+from .attention import (attn_layout, gqa_forward, gqa_decode, gqa_init_cache,
+                        gqa_prefill_cache)
+from .transformer import ModelConfig, _remat
+from . import rglru as rg
+from . import xlstm as xl
+
+
+def _stack(lay: Layout, n: int) -> Layout:
+    return {k: (_stack(v, n) if isinstance(v, dict)
+                else ((n, *v[0]), (None, *v[1]), v[2]))
+            for k, v in lay.items()}
+
+
+# ---------------------------------------------------------------------------
+# Griffin / RecurrentGemma
+# ---------------------------------------------------------------------------
+
+class GriffinLM:
+    """(rec, rec, local-attn) repeating pattern + GeGLU MLP per layer."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "griffin"
+        self.cfg = cfg
+        self.n_units, self.n_tail = divmod(cfg.num_layers, 3)
+        self.rcfg = rg.RGLRUConfig(d_model=cfg.d_model,
+                                   d_rnn=cfg.d_rnn or cfg.d_model,
+                                   conv_width=cfg.conv_width)
+
+    # -- layouts --------------------------------------------------------
+    def _rec_layer(self) -> Layout:
+        d = self.cfg.d_model
+        return {"ln_mix": ((d,), (None,), "zeros"),
+                "mix": rg.rglru_layout(self.rcfg),
+                "ln_mlp": ((d,), (None,), "zeros"),
+                "mlp": glu_mlp_layout(d, self.cfg.d_ff)}
+
+    def _attn_layer(self) -> Layout:
+        d = self.cfg.d_model
+        return {"ln_mix": ((d,), (None,), "zeros"),
+                "mix": attn_layout(self.cfg.attn_config()),
+                "ln_mlp": ((d,), (None,), "zeros"),
+                "mlp": glu_mlp_layout(d, self.cfg.d_ff)}
+
+    def layout(self) -> Layout:
+        cfg = self.cfg
+        unit = {"rec1": self._rec_layer(), "rec2": self._rec_layer(),
+                "attn": self._attn_layer()}
+        lay: Layout = {
+            "embed": ((cfg.vocab, cfg.d_model), ("vocab", "model_d"), "embed"),
+            "units": _stack(unit, self.n_units),
+            "ln_out": ((cfg.d_model,), (None,), "zeros"),
+        }
+        for i in range(self.n_tail):
+            lay[f"tail{i}"] = self._rec_layer()
+        return lay
+
+    def init(self, key):
+        return init_params(key, self.layout(), self.cfg.dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.layout(), self.cfg.dtype)
+
+    def param_specs(self, rules):
+        return param_specs(rules, self.layout())
+
+    def param_count(self) -> int:
+        return param_count(self.layout())
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    # -- blocks -----------------------------------------------------------
+    def _rec_block(self, lp, x, state):
+        y, st = rg.block_forward(lp["mix"], rms_norm(x, lp["ln_mix"]),
+                                 self.rcfg, state)
+        x = x + y
+        return x + glu_mlp(lp["mlp"], rms_norm(x, lp["ln_mlp"]),
+                           act=self.cfg.act), st
+
+    def _attn_block_fwd(self, lp, x, positions):
+        acfg = self.cfg.attn_config()
+        y, kv = gqa_forward(lp["mix"], rms_norm(x, lp["ln_mix"]), positions, acfg)
+        x = x + y
+        return x + glu_mlp(lp["mlp"], rms_norm(x, lp["ln_mlp"]),
+                           act=self.cfg.act), kv
+
+    def _attn_block_dec(self, lp, x, cache):
+        acfg = self.cfg.attn_config()
+        y, cache = gqa_decode(lp["mix"], rms_norm(x, lp["ln_mix"]), cache, acfg)
+        x = x + y
+        return x + glu_mlp(lp["mlp"], rms_norm(x, lp["ln_mlp"]),
+                           act=self.cfg.act), cache
+
+    # -- forward ----------------------------------------------------------
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens]
+        return x * jnp.asarray(math.sqrt(self.cfg.d_model), self.cfg.dtype)
+
+    def _stack_fwd(self, params, x, positions, collect: bool):
+        cfg = self.cfg
+
+        def unit_fwd(x, up):
+            x, s1 = self._rec_block(up["rec1"], x, None)
+            x, s2 = self._rec_block(up["rec2"], x, None)
+            x, kv = self._attn_block_fwd(up["attn"], x, positions)
+            out = (s1, s2, kv if collect else jnp.zeros((0,)))
+            return x, out
+
+        unit_fwd = _remat(unit_fwd, cfg.remat_policy)
+        x, (s1s, s2s, kvs) = jax.lax.scan(unit_fwd, x, params["units"])
+        tails = []
+        for i in range(self.n_tail):
+            x, st = self._rec_block(params[f"tail{i}"], x, None)
+            tails.append(st)
+        return x, (s1s, s2s, kvs, tails)
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = self._embed(params, batch["tokens"])
+        S = x.shape[1]
+        x, _ = self._stack_fwd(params, x, jnp.arange(S), collect=False)
+        x = rms_norm(x, params["ln_out"])
+        return chunked_cross_entropy(
+            lambda l: l.astype(jnp.float32), x, params["embed"].T,
+            batch["labels"], batch["mask"].astype(jnp.float32),
+            chunk=min(cfg.loss_chunk, S))
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        S = tokens.shape[1]
+        max_len = max_len or S
+        positions = jnp.arange(S)
+        x = self._embed(params, tokens)
+        x, (s1s, s2s, kvs, tails) = self._stack_fwd(params, x, positions,
+                                                    collect=True)
+        x = rms_norm(x, params["ln_out"])
+        logits = (x[:, -1:, :] @ params["embed"].T).astype(jnp.float32)
+        acfg = cfg.attn_config()
+        attn_cache = jax.vmap(
+            lambda kv: gqa_prefill_cache(acfg, kv, positions, max_len))(kvs)
+        cache = {"rec1": s1s, "rec2": s2s, "attn": attn_cache, "tails": tails,
+                 "next": jnp.asarray(S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        x = self._embed(params, tokens)
+
+        def unit_dec(x, xs):
+            up, s1, s2, ac = xs
+            x, s1 = self._rec_block(up["rec1"], x, s1)
+            x, s2 = self._rec_block(up["rec2"], x, s2)
+            x, ac = self._attn_block_dec(up["attn"], x, ac)
+            return x, (s1, s2, ac)
+
+        x, (s1s, s2s, acs) = jax.lax.scan(
+            unit_dec, x, (params["units"], cache["rec1"], cache["rec2"],
+                          cache["attn"]))
+        tails = []
+        for i in range(self.n_tail):
+            x, st = self._rec_block(params[f"tail{i}"], x, cache["tails"][i])
+            tails.append(st)
+        x = rms_norm(x, params["ln_out"])
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits, {"rec1": s1s, "rec2": s2s, "attn": acs, "tails": tails,
+                        "next": cache["next"] + 1}
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        acfg = cfg.attn_config()
+        rec = rg.init_state(self.rcfg, batch, cfg.dtype)
+        stack = lambda a: jnp.broadcast_to(a, (self.n_units, *a.shape))
+        return {
+            "rec1": jax.tree_util.tree_map(stack, rec),
+            "rec2": jax.tree_util.tree_map(stack, rec),
+            "attn": jax.tree_util.tree_map(
+                stack, gqa_init_cache(acfg, batch, max_len, cfg.dtype)),
+            "tails": [rg.init_state(self.rcfg, batch, cfg.dtype)
+                      for _ in range(self.n_tail)],
+            "next": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_specs(self, rules):
+        from jax.sharding import PartitionSpec as P
+        b = rules.axis("batch")
+        rec = {"h": P(None, b), "conv": P(None, b, None, None)}
+        rec_tail = {"h": P(b), "conv": P(b, None, None)}
+        return {
+            "rec1": rec, "rec2": rec,
+            "attn": {"k": P(None, b, None, None), "v": P(None, b, None, None),
+                     "pos": P(None, None), "next": P(None)},
+            "tails": [rec_tail for _ in range(self.n_tail)],
+            "next": P(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+class XLSTMLM:
+    """Alternating (mLSTM, sLSTM) units, scanned."""
+
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.family == "xlstm"
+        self.cfg = cfg
+        assert cfg.num_layers % 2 == 0
+        self.n_units = cfg.num_layers // 2
+        self.xcfg = xl.XLSTMConfig(d_model=cfg.d_model,
+                                   num_heads=cfg.num_heads,
+                                   conv_width=cfg.conv_width)
+
+    def layout(self) -> Layout:
+        cfg = self.cfg
+        d = cfg.d_model
+        unit = {
+            "ln_m": ((d,), (None,), "zeros"),
+            "m": xl.mlstm_layout(self.xcfg),
+            "ln_s": ((d,), (None,), "zeros"),
+            "s": xl.slstm_layout(self.xcfg),
+        }
+        return {
+            "embed": ((cfg.vocab, d), ("vocab", "model_d"), "embed"),
+            "units": _stack(unit, self.n_units),
+            "ln_out": ((d,), (None,), "zeros"),
+        }
+
+    def init(self, key):
+        return init_params(key, self.layout(), self.cfg.dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.layout(), self.cfg.dtype)
+
+    def param_specs(self, rules):
+        return param_specs(rules, self.layout())
+
+    def param_count(self) -> int:
+        return param_count(self.layout())
+
+    def active_param_count(self) -> int:
+        return self.param_count()
+
+    def _unit(self, up, x, state):
+        m_state = None if state is None else state["m"]
+        s_state = None if state is None else state["s"]
+        y, m_new = xl.mlstm_block(up["m"], rms_norm(x, up["ln_m"]), self.xcfg,
+                                  m_state)
+        x = x + y
+        y, s_new = xl.slstm_block(up["s"], rms_norm(x, up["ln_s"]), self.xcfg,
+                                  s_state)
+        return x + y, {"m": m_new, "s": s_new}
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        S = x.shape[1]
+
+        def body(x, up):
+            x, _ = self._unit(up, x, None)
+            return x, None
+
+        body = _remat(body, cfg.remat_policy)
+        x, _ = jax.lax.scan(body, x, params["units"])
+        x = rms_norm(x, params["ln_out"])
+        return chunked_cross_entropy(
+            lambda l: l.astype(jnp.float32), x, params["embed"].T,
+            batch["labels"], batch["mask"].astype(jnp.float32),
+            chunk=min(cfg.loss_chunk, S))
+
+    def prefill(self, params, batch, max_len: int | None = None):
+        x = params["embed"][batch["tokens"]]
+        S = x.shape[1]
+
+        def body(x, up):
+            x, st = self._unit(up, x, self._fresh_state(x.shape[0]))
+            return x, st
+
+        x, states = jax.lax.scan(body, x, params["units"])
+        x = rms_norm(x, params["ln_out"])
+        logits = (x[:, -1:, :] @ params["embed"].T).astype(jnp.float32)
+        return logits, {"units": states, "next": jnp.asarray(S, jnp.int32)}
+
+    def _fresh_state(self, batch: int):
+        cfg = self.cfg
+        hd = cfg.d_model * 2 // cfg.num_heads  # mLSTM runs at 2x width
+        return {
+            "m": {"rec": xl.init_mlstm_state(batch, cfg.num_heads, hd),
+                  "conv": jnp.zeros((batch, self.xcfg.conv_width - 1,
+                                     cfg.d_model * 2), cfg.dtype)},
+            "s": {"rec": xl.init_slstm_state(batch, cfg.d_model),
+                  "conv": jnp.zeros((batch, self.xcfg.conv_width - 1,
+                                     cfg.d_model), cfg.dtype)},
+        }
+
+    def decode_step(self, params, tokens, cache):
+        x = params["embed"][tokens]
+
+        def body(x, xs):
+            up, st = xs
+            x, st = self._unit(up, x, st)
+            return x, st
+
+        x, states = jax.lax.scan(body, x, (params["units"], cache["units"]))
+        x = rms_norm(x, params["ln_out"])
+        logits = (x @ params["embed"].T).astype(jnp.float32)
+        return logits, {"units": states, "next": cache["next"] + 1}
+
+    def init_cache(self, batch: int, max_len: int):
+        one = self._fresh_state(batch)
+        stack = lambda a: jnp.broadcast_to(a, (self.n_units, *a.shape))
+        return {"units": jax.tree_util.tree_map(stack, one),
+                "next": jnp.zeros((), jnp.int32)}
+
+    def cache_specs(self, rules):
+        from jax.sharding import PartitionSpec as P
+        b = rules.axis("batch")
+        one = {
+            "m": {"rec": {"C": P(None, b), "n": P(None, b), "m": P(None, b)},
+                  "conv": P(None, b, None, None)},
+            "s": {"rec": {"c": P(None, b), "n": P(None, b), "m": P(None, b),
+                          "h": P(None, b)},
+                  "conv": P(None, b, None, None)},
+        }
+        return {"units": one, "next": P()}
+
+
+__all__ = ["GriffinLM", "XLSTMLM"]

@@ -1,0 +1,23 @@
+"""Model registry: family string -> Model class; built from ModelConfig."""
+
+from __future__ import annotations
+
+from .transformer import ModelConfig, TransformerLM
+from .hybrid import GriffinLM, XLSTMLM
+
+_FAMILIES = {
+    "transformer": TransformerLM,
+    "griffin": GriffinLM,
+    "xlstm": XLSTMLM,
+}
+
+
+def build_model(cfg: ModelConfig):
+    try:
+        cls = _FAMILIES[cfg.family]
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r}: {list(_FAMILIES)}")
+    return cls(cfg)
+
+
+__all__ = ["build_model"]

@@ -1,0 +1,117 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The recurrence is elementwise-diagonal and input-gated:
+    r_t = sigmoid(x_t W_r + b_r)          (recurrence gate)
+    i_t = sigmoid(x_t W_i + b_i)          (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training/prefill evaluates it with `lax.associative_scan` over the combine
+((a1,b1),(a2,b2)) -> (a1*a2, a2*b1 + b2) — O(log S) depth, which is what makes
+the hybrid arch eligible for the 500k-token cells.  Decode carries (h, conv
+tail) state — O(1) per step, no KV cache.
+
+Block structure (Griffin recurrent block): two input branches
+  y = W_out( GeLU(x W_gate) * RGLRU(conv1d_4(x W_x)) ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import Layout
+
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    d_rnn: int          # recurrence width (RecurrentGemma: d_rnn = d_model)
+    conv_width: int = 4
+
+
+def rglru_layout(cfg: RGLRUConfig) -> Layout:
+    d, r = cfg.d_model, cfg.d_rnn
+    return {
+        "w_x": ((d, r), ("model_d", "ff"), "normal"),
+        "w_gate": ((d, r), ("model_d", "ff"), "normal"),
+        "conv_w": ((cfg.conv_width, r), (None, "ff"), "normal"),
+        "conv_b": ((r,), ("ff",), "zeros"),
+        "w_rg": ((r, r), ("ff", None), "normal"),
+        "b_rg": ((r,), (None,), "zeros"),
+        "w_ig": ((r, r), ("ff", None), "normal"),
+        "b_ig": ((r,), (None,), "zeros"),
+        "lam": ((r,), (None,), "rglru_a"),
+        "w_out": ((r, d), ("ff", "model_d"), "normal"),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: (B, S, R), w: (W, R) depthwise. state: (B, W-1, R) tail or None."""
+    W = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + b, xp[:, -(W - 1):, :]
+
+
+def _gates(params, u):
+    r = jax.nn.sigmoid(u @ params["w_rg"] + params["b_rg"]).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ params["w_ig"] + params["b_ig"]).astype(jnp.float32)
+    log_a = -_C * jax.nn.softplus(params["lam"]).astype(jnp.float32) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def rglru_scan(params, u):
+    """Full-sequence RG-LRU via associative scan. u: (B, S, R) -> (B, S, R)."""
+    a, b = _gates(params, u)
+
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_step(params, u, h_prev):
+    """One decode step. u: (B, 1, R), h_prev: (B, R) f32."""
+    a, b = _gates(params, u)
+    h = a[:, 0] * h_prev + b[:, 0]
+    return h[:, None, :].astype(u.dtype), h
+
+
+def block_forward(params, x, cfg: RGLRUConfig, state=None):
+    """Griffin recurrent block. state: None (train/prefill from scratch) or
+    {"h": (B,R) f32, "conv": (B,W-1,R)}. Returns (y, new_state)."""
+    gate = jax.nn.gelu(x @ params["w_gate"], approximate=True)
+    u = x @ params["w_x"]
+    conv_state = None if state is None else state["conv"]
+    u, conv_tail = _causal_conv1d(u, params["conv_w"], params["conv_b"],
+                                  conv_state)
+    if state is None or x.shape[1] > 1:
+        h_seq, h_last = rglru_scan(params, u)
+    else:
+        h_seq, h_last = rglru_step(params, u, state["h"])
+    y = (gate * h_seq) @ params["w_out"]
+    return y, {"h": h_last, "conv": conv_tail}
+
+
+def init_state(cfg: RGLRUConfig, batch: int, dtype=jnp.bfloat16):
+    return {"h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_rnn), dtype)}
+
+
+__all__ = ["RGLRUConfig", "rglru_layout", "block_forward", "init_state",
+           "rglru_scan", "rglru_step"]

@@ -1,0 +1,380 @@
+"""Generic transformer LM assembly (dense / GQA / MQA / SWA / MoE / MLA /
+encoder-only / external-embedding), with scan-over-layers + remat.
+
+One `ModelConfig` covers 8 of the 10 assigned architectures; the Griffin and
+xLSTM stacks live in hybrid.py and plug into the same Model API:
+
+    model.init(key)                       -> params pytree
+    model.layout()                        -> param layout table (shapes+specs)
+    model.loss(params, batch)             -> scalar (train_step objective)
+    model.prefill(params, batch)          -> (last-position logits, cache)
+    model.decode_step(params, tokens, cache) -> (logits, cache)
+    model.init_cache(batch, max_len)      -> cache pytree (ring buffers)
+
+Layers of one kind are stacked and driven by `lax.scan` (constant compile time
+at 60 layers — required for the 1-core dry-run and good practice at 1000-node
+scale), each wrapped in `jax.checkpoint` with a configurable remat policy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import (Layout, init_params, abstract_params, param_specs,
+                     param_count, rms_norm, glu_mlp, glu_mlp_layout,
+                     mlp, mlp_layout, chunked_cross_entropy)
+from .attention import (AttnConfig, attn_layout, gqa_forward, gqa_decode,
+                        gqa_init_cache, gqa_prefill_cache, mla_forward,
+                        mla_decode, mla_init_cache)
+from .moe import MoEConfig, moe_layout, moe_forward
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # transformer | griffin | xlstm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None      # default d_model // num_heads
+    act: str = "silu"
+    causal: bool = True
+    encoder_only: bool = False       # hubert: bidirectional, no decode
+    window: int | None = None        # sliding-window attention
+    rope_theta: float = 10000.0
+    moe: MoEConfig | None = None
+    mla: dict | None = None          # q_lora/kv_lora/rope_head_dim/v_head_dim
+    embed_inputs: bool = True        # False: batch supplies "embeds" directly
+    num_image_tokens: int = 0        # llava: prepended patch embeddings
+    embed_scale: bool = False        # gemma: scale embeddings by sqrt(d)
+    mlp_glu: bool = True             # False: plain 2-matrix MLP (hubert)
+    use_rope: bool = True            # False: frontend supplies positions (hubert)
+    tie_embeddings: bool = True
+    scan_layers: bool = True
+    remat_policy: str = "full"       # none | dots | full
+    dtype: Any = jnp.bfloat16
+    # griffin/xlstm extras
+    block_pattern: tuple = ()
+    d_rnn: int = 0
+    conv_width: int = 4
+    # attention blocking
+    q_block: int = 512
+    kv_block: int = 1024
+    loss_chunk: int = 512
+    # sub-quadratic flag for the 500k cells (set per arch in configs/)
+    subquadratic: bool = False
+    causal_schedule: str = "full"    # "banded": §Perf causal band skipping
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def attn_config(self) -> AttnConfig:
+        mla = self.mla or {}
+        return AttnConfig(
+            d_model=self.d_model, num_heads=self.num_heads,
+            num_kv_heads=self.num_kv_heads, head_dim=self.hd,
+            causal=self.causal and not self.encoder_only,
+            window=self.window, rope_theta=self.rope_theta,
+            use_rope=self.use_rope,
+            q_block=self.q_block, kv_block=self.kv_block,
+            q_lora=mla.get("q_lora"), kv_lora=mla.get("kv_lora"),
+            rope_head_dim=mla.get("rope_head_dim", 64),
+            v_head_dim=mla.get("v_head_dim"),
+            causal_schedule=self.causal_schedule)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = {"full": None,
+           "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+           }[policy]
+    return jax.checkpoint(fn, policy=pol)
+
+
+# ---------------------------------------------------------------------------
+# Layouts
+# ---------------------------------------------------------------------------
+
+def layer_layout(cfg: ModelConfig) -> Layout:
+    lay: Layout = {
+        "ln_attn": ((cfg.d_model,), (None,), "zeros"),
+        "attn": attn_layout(cfg.attn_config()),
+        "ln_mlp": ((cfg.d_model,), (None,), "zeros"),
+    }
+    if cfg.moe is not None:
+        lay["moe"] = moe_layout(cfg.d_model, cfg.moe)
+    elif cfg.mlp_glu:
+        lay["mlp"] = glu_mlp_layout(cfg.d_model, cfg.d_ff)
+    else:
+        lay["mlp"] = mlp_layout(cfg.d_model, cfg.d_ff)
+    return lay
+
+
+def _stack_layout(lay: Layout, n: int) -> Layout:
+    return {k: (_stack_layout(v, n) if isinstance(v, dict)
+                else ((n, *v[0]), (None, *v[1]), v[2]))
+            for k, v in lay.items()}
+
+
+def model_layout(cfg: ModelConfig) -> Layout:
+    lay: Layout = {}
+    if cfg.embed_inputs or cfg.num_image_tokens:
+        lay["embed"] = ((cfg.vocab, cfg.d_model), ("vocab", "model_d"), "embed")
+    per_layer = layer_layout(cfg)
+    if cfg.scan_layers:
+        lay["layers"] = _stack_layout(per_layer, cfg.num_layers)
+    else:
+        lay["layers"] = {f"l{i}": per_layer for i in range(cfg.num_layers)}
+    lay["ln_out"] = ((cfg.d_model,), (None,), "zeros")
+    if not cfg.tie_embeddings:
+        lay["head"] = ((cfg.d_model, cfg.vocab), ("model_d", "vocab"), "normal")
+    return lay
+
+
+# ---------------------------------------------------------------------------
+# Layer body
+# ---------------------------------------------------------------------------
+
+def _layer_fwd(cfg: ModelConfig, lp, x, positions):
+    """Full-sequence layer. Returns (x', kv_for_cache, aux_loss)."""
+    acfg = cfg.attn_config()
+    h = rms_norm(x, lp["ln_attn"])
+    if acfg.kv_lora is not None:
+        attn_out, kv = mla_forward(lp["attn"], h, positions, acfg)
+    else:
+        attn_out, kv = gqa_forward(lp["attn"], h, positions, acfg)
+    x = x + attn_out
+    h = rms_norm(x, lp["ln_mlp"])
+    if cfg.moe is not None:
+        mlp_out, aux = moe_forward(lp["moe"], h, cfg.moe, act=cfg.act)
+    elif cfg.mlp_glu:
+        mlp_out, aux = glu_mlp(lp["mlp"], h, act=cfg.act), jnp.float32(0)
+    else:
+        mlp_out, aux = mlp(lp["mlp"], h, act=cfg.act), jnp.float32(0)
+    return x + mlp_out, kv, aux
+
+
+def _layer_decode(cfg: ModelConfig, lp, x, cache_l):
+    acfg = cfg.attn_config()
+    h = rms_norm(x, lp["ln_attn"])
+    if acfg.kv_lora is not None:
+        attn_out, cache_l = mla_decode(lp["attn"], h, cache_l, acfg)
+    else:
+        attn_out, cache_l = gqa_decode(lp["attn"], h, cache_l, acfg)
+    x = x + attn_out
+    h = rms_norm(x, lp["ln_mlp"])
+    if cfg.moe is not None:
+        mlp_out, _ = moe_forward(lp["moe"], h, cfg.moe, act=cfg.act)
+    elif cfg.mlp_glu:
+        mlp_out = glu_mlp(lp["mlp"], h, act=cfg.act)
+    else:
+        mlp_out = mlp(lp["mlp"], h, act=cfg.act)
+    return x + mlp_out, cache_l
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+def _run_stack(cfg: ModelConfig, params, x, positions, collect_kv: bool):
+    body = functools.partial(_layer_fwd, cfg)
+    body = _remat(body, cfg.remat_policy)
+    if cfg.scan_layers:
+        def scan_body(carry, lp):
+            h, aux = carry
+            h, kv, a = body(lp, h, positions)
+            return (h, aux + a), (kv if collect_kv else jnp.zeros((0,)))
+        (x, aux), kvs = jax.lax.scan(scan_body, (x, jnp.float32(0)),
+                                     params["layers"])
+        return x, kvs, aux
+    aux = jnp.float32(0)
+    kvs = []
+    for i in range(cfg.num_layers):
+        x, kv, a = body(params["layers"][f"l{i}"], x, positions)
+        aux += a
+        if collect_kv:
+            kvs.append(kv)
+    return x, (jnp.stack(kvs) if collect_kv and kvs else None), aux
+
+
+def _run_stack_decode(cfg: ModelConfig, params, x, cache):
+    body = functools.partial(_layer_decode, cfg)
+    if cfg.scan_layers:
+        def scan_body(h, xs):
+            lp, cl = xs
+            h, cl = body(lp, h, cl)
+            return h, cl
+        x, cache = jax.lax.scan(scan_body, x, (params["layers"], cache))
+        return x, cache
+    new_cache = []
+    for i in range(cfg.num_layers):
+        x, cl = body(params["layers"][f"l{i}"], x, cache[i])
+        new_cache.append(cl)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params -------------------------------------------------------------
+    def layout(self) -> Layout:
+        return model_layout(self.cfg)
+
+    def init(self, key):
+        return init_params(key, self.layout(), self.cfg.dtype)
+
+    def abstract_params(self):
+        return abstract_params(self.layout(), self.cfg.dtype)
+
+    def param_specs(self, rules):
+        return param_specs(rules, self.layout())
+
+    def param_count(self) -> int:
+        return param_count(self.layout())
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k + shared experts only)."""
+        cfg = self.cfg
+        total = param_count(self.layout())
+        if cfg.moe is None:
+            return total
+        e = cfg.moe
+        per_expert = 3 * cfg.d_model * e.d_ff_expert
+        routed_all = cfg.num_layers * e.num_experts * per_expert
+        routed_active = cfg.num_layers * e.top_k * per_expert
+        return total - routed_all + routed_active
+
+    # -- inputs -------------------------------------------------------------
+    def _embed_tokens(self, params, batch):
+        cfg = self.cfg
+        if not cfg.embed_inputs and not cfg.num_image_tokens:
+            return batch["embeds"].astype(cfg.dtype)
+        x = params["embed"][batch["tokens"]]
+        if cfg.num_image_tokens:
+            img = batch["image_embeds"].astype(cfg.dtype)
+            x = jnp.concatenate([img, x], axis=1)
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+        return x
+
+    def _head(self, params):
+        if self.cfg.tie_embeddings and "embed" in params:
+            return params["embed"].T
+        return params["head"]
+
+    # -- training -----------------------------------------------------------
+    def loss(self, params, batch):
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.arange(S)
+        x, _, aux = _run_stack(cfg, params, x, positions, collect_kv=False)
+        x = rms_norm(x, params["ln_out"])
+        ce = chunked_cross_entropy(
+            lambda l: l.astype(jnp.float32), x, self._head(params),
+            batch["labels"], batch["mask"].astype(jnp.float32),
+            chunk=min(cfg.loss_chunk, S))
+        return ce + 0.01 * aux / max(cfg.num_layers, 1)
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, params, batch, max_len: int | None = None):
+        cfg = self.cfg
+        x = self._embed_tokens(params, batch)
+        B, S, _ = x.shape
+        max_len = max_len or S
+        positions = jnp.arange(S)
+        if cfg.encoder_only:
+            # encoder "prefill" = full-sequence emissions (the alignment-head
+            # input); encoders keep no autoregressive cache
+            x, _, _ = _run_stack(cfg, params, x, positions, collect_kv=False)
+            x = rms_norm(x, params["ln_out"])
+
+            def emit(chunk):  # chunked head matmul: avoid (B, S, V) at once?
+                return (chunk @ self._head(params)).astype(jnp.float32)
+            logits = emit(x)
+            return logits, None
+        x, kvs, _ = _run_stack(cfg, params, x, positions, collect_kv=True)
+        x = rms_norm(x, params["ln_out"])
+        logits = (x[:, -1:, :] @ self._head(params)).astype(jnp.float32)
+        acfg = cfg.attn_config()
+        if acfg.kv_lora is not None:
+            def mk(kv):
+                C = max_len
+                lat = jnp.pad(kv, ((0, 0), (0, C - S), (0, 0)))
+                kpos = jnp.concatenate([positions.astype(jnp.int32),
+                                        jnp.full((C - S,), -1, jnp.int32)])
+                return {"latent": lat, "pos": kpos,
+                        "next": jnp.asarray(S, jnp.int32)}
+        else:
+            def mk(kv):
+                return gqa_prefill_cache(acfg, kv, positions, max_len)
+        cache = jax.vmap(mk)(kvs) if cfg.scan_layers else [mk(kv) for kv in kvs]
+        return logits, cache
+
+    def decode_step(self, params, tokens, cache):
+        cfg = self.cfg
+        if cfg.encoder_only:
+            raise ValueError(f"{cfg.name} is encoder-only: no decode step")
+        x = params["embed"][tokens]
+        if cfg.embed_scale:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), cfg.dtype)
+        x, cache = _run_stack_decode(cfg, params, x, cache)
+        x = rms_norm(x, params["ln_out"])
+        logits = (x @ self._head(params)).astype(jnp.float32)
+        return logits, cache
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        acfg = cfg.attn_config()
+        if acfg.kv_lora is not None:
+            one = mla_init_cache(acfg, batch, max_len, cfg.dtype)
+        else:
+            one = gqa_init_cache(acfg, batch, max_len, cfg.dtype)
+        if cfg.scan_layers:
+            return jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), one)
+        return [one for _ in range(cfg.num_layers)]
+
+    def cache_specs(self, rules):
+        """PartitionSpec tree matching init_cache (batch over data axis)."""
+        cfg = self.cfg
+        acfg = cfg.attn_config()
+        lead = (None,) if cfg.scan_layers else ()
+        kv_axis = "kv_heads" if (cfg.mla is None and cfg.num_kv_heads > 1) else None
+
+        def spec(*ax):
+            from jax.sharding import PartitionSpec as P
+            names = lead + ax
+            return P(*(rules.axis(a) if isinstance(a, str) else a for a in names))
+
+        if acfg.kv_lora is not None:
+            # MLA latent has no heads dim: shard the cache *sequence* over the
+            # model axis instead (XLA handles the cross-shard softmax)
+            one = {"latent": spec("batch", "heads", None),
+                   "pos": spec("heads"), "next": spec()}
+        else:
+            one = {"k": spec("batch", None, kv_axis),
+                   "v": spec("batch", None, kv_axis),
+                   "pos": spec(None), "next": spec()}
+        if cfg.scan_layers:
+            return one
+        return [one for _ in range(cfg.num_layers)]
+
+
+__all__ = ["ModelConfig", "TransformerLM", "model_layout", "layer_layout"]

@@ -1,0 +1,256 @@
+"""xLSTM blocks (sLSTM + mLSTM), per Beck et al. 2024 (arXiv:2405.04517).
+
+* mLSTM: matrix memory C_t (hd x hd) per head with exponential gating; the
+  query reads an associative retrieval.  Recurrent (decode) form carries
+  (C, n, m); training uses the parallel quadratic form (attention-like with
+  log-gate decay matrix D) evaluated blockwise — sub-quadratic in memory via
+  the same online pattern as attention, here chunked with a stabilised
+  cumulative-gate formulation.
+* sLSTM: scalar memory per unit with exponential gating; inherently sequential
+  -> `lax.scan` (the paper's sLSTM has no parallel form).
+
+Simplifications recorded in DESIGN.md: block-diagonal projections and GroupNorm
+are replaced by per-head RMS normalisation; causal conv1d front-ends kept.
+Block pattern (xlstm-350m config): alternating mLSTM/sLSTM at ratio 1:1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import Layout, rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    d_model: int
+    num_heads: int
+    proj_factor_m: float = 2.0   # mLSTM up-projection
+    proj_factor_s: float = 4.0 / 3.0
+    conv_width: int = 4
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_layout(cfg: XLSTMConfig) -> Layout:
+    d = cfg.d_model
+    dp = int(d * cfg.proj_factor_m)
+    return {
+        "w_up": ((d, 2 * dp), ("model_d", "ff"), "normal"),
+        "conv_w": ((cfg.conv_width, dp), (None, "ff"), "normal"),
+        "conv_b": ((dp,), ("ff",), "zeros"),
+        "wq": ((dp, dp), ("ff", None), "normal"),
+        "wk": ((dp, dp), ("ff", None), "normal"),
+        "wv": ((dp, dp), ("ff", None), "normal"),
+        "w_if": ((dp, 2 * cfg.num_heads), ("ff", None), "normal"),
+        "b_if": ((2 * cfg.num_heads,), (None,), "zeros"),
+        "norm": ((dp,), ("ff",), "zeros"),
+        "w_down": ((dp, d), ("ff", "model_d"), "normal"),
+    }
+
+
+def _heads(x, h):
+    B, S, D = x.shape
+    return x.reshape(B, S, h, D // h)
+
+
+def mlstm_parallel(q, k, v, log_i, log_f):
+    """Stabilised parallel mLSTM (quadratic form).
+
+    q,k,v: (B, S, H, hd); log_i/log_f: (B, S, H). Returns (B, S, H, hd).
+    D[t,s] = exp(cumF[t] - cumF[s] + log_i[s]) for s <= t, stabilised by the
+    running row max (paper eq. 15-19).
+    """
+    B, S, H, hd = q.shape
+    cf = jnp.cumsum(log_f, axis=1)                        # (B, S, H)
+    lm = cf[:, :, None, :] - cf[:, None, :, :]            # (B, T, S, H) t>=s
+    lg = lm + log_i[:, None, :, :]                        # + log i_s
+    tri = jnp.tril(jnp.ones((S, S), bool))
+    lg = jnp.where(tri[None, :, :, None], lg, -jnp.inf)
+    m = jnp.max(lg, axis=2, keepdims=True)                # row-stabiliser
+    dmat = jnp.exp(lg - m)                                # (B, T, S, H)
+    s = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(hd)
+    c = s * dmat
+    n = jnp.maximum(jnp.abs(jnp.sum(c, axis=2)), jnp.exp(-m[:, :, 0]))  # (B,T,H)
+    out = jnp.einsum("btsh,bshd->bthd", c, v.astype(jnp.float32))
+    return out / n[..., None]
+
+
+def mlstm_chunked(q, k, v, log_i, log_f, chunk: int = 256):
+    """Blockwise evaluation of the parallel form (bounds the (S, S) matrix to
+    (chunk, S) slabs; exact, not an approximation)."""
+    B, S, H, hd = q.shape
+    if S <= chunk:
+        return mlstm_parallel(q, k, v, log_i, log_f)
+    n = S // chunk
+    cf = jnp.cumsum(log_f, axis=1)
+
+    def body(_, ti):
+        t0 = ti * chunk
+        qt = jax.lax.dynamic_slice_in_dim(q, t0, chunk, 1)
+        cft = jax.lax.dynamic_slice_in_dim(cf, t0, chunk, 1)
+        lm = cft[:, :, None, :] - cf[:, None, :, :]           # (B, c, S, H)
+        lg = lm + log_i[:, None, :, :]
+        tpos = t0 + jnp.arange(chunk)
+        mask = tpos[:, None] >= jnp.arange(S)[None, :]
+        lg = jnp.where(mask[None, :, :, None], lg, -jnp.inf)
+        m = jnp.max(lg, axis=2, keepdims=True)
+        dmat = jnp.exp(lg - m)
+        s = jnp.einsum("bthd,bshd->btsh", qt.astype(jnp.float32),
+                       k.astype(jnp.float32)) / math.sqrt(hd)
+        c = s * dmat
+        nrm = jnp.maximum(jnp.abs(jnp.sum(c, axis=2)), jnp.exp(-m[:, :, 0]))
+        out = jnp.einsum("btsh,bshd->bthd", c, v.astype(jnp.float32))
+        return None, out / nrm[..., None]
+
+    body = jax.checkpoint(body)  # (B, c, S, H) slabs recomputed in backward
+    _, outs = jax.lax.scan(body, None, jnp.arange(n))
+    return outs.swapaxes(0, 1).reshape(B, S, H, hd)
+
+
+def mlstm_step(q, k, v, log_i, log_f, state):
+    """Recurrent decode step. state: dict(C (B,H,hd,hd), n (B,H,hd), m (B,H))."""
+    B, S, H, hd = q.shape  # S == 1
+    qt, kt, vt = (x[:, 0].astype(jnp.float32) for x in (q, k, v))
+    li, lf = log_i[:, 0], log_f[:, 0]                     # (B, H)
+    m_new = jnp.maximum(lf + state["m"], li)
+    fi = jnp.exp(lf + state["m"] - m_new)[..., None]
+    ii = jnp.exp(li - m_new)[..., None]
+    kv = kt[..., :, None] * vt[..., None, :] / math.sqrt(hd)  # (B,H,hd,hd)
+    C = fi[..., None] * state["C"] + ii[..., None] * kv
+    n = fi * state["n"] + ii * kt
+    num = jnp.einsum("bhd,bhde->bhe", qt, C)
+    den = jnp.maximum(jnp.abs(jnp.sum(qt * n, -1)), jnp.exp(-m_new))
+    out = (num / den[..., None])[:, None]                 # (B,1,H,hd)
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def mlstm_block(params, x, cfg: XLSTMConfig, state=None):
+    """Pre-up-projected mLSTM block. Returns (y, new_state)."""
+    from .rglru import _causal_conv1d
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    up = x @ params["w_up"]
+    u, z = jnp.split(up, 2, axis=-1)                      # branch + gate
+    conv_state = None if state is None else state["conv"]
+    uc, conv_tail = _causal_conv1d(u, params["conv_w"], params["conv_b"],
+                                   conv_state)
+    uc = jax.nn.silu(uc)
+    q = _heads(uc @ params["wq"], H)
+    k = _heads(uc @ params["wk"], H)
+    v = _heads(u @ params["wv"], H)
+    gates = (uc @ params["w_if"] + params["b_if"]).astype(jnp.float32)
+    log_i, log_f = gates[..., :H], jax.nn.log_sigmoid(gates[..., H:])
+
+    if state is None or S > 1:
+        h = mlstm_chunked(q, k, v, log_i, log_f)
+        mst = _mlstm_final_state(q, k, v, log_i, log_f)
+    else:
+        h, mst = mlstm_step(q, k, v, log_i, log_f, state["rec"])
+    hp = h.reshape(B, S, -1).astype(x.dtype)
+    hn = rms_norm(hp, params["norm"]) * jax.nn.silu(z)
+    y = hn @ params["w_down"]
+    return y, {"rec": mst, "conv": conv_tail}
+
+
+def _mlstm_final_state(q, k, v, log_i, log_f):
+    """Recurrent state after a full prefill (scanned; only used at prefill->
+    decode handoff, O(S) sequential but off the training path)."""
+    B, S, H, hd = q.shape
+
+    def body(st, xs):
+        qt, kt, vt, li, lf = xs
+        _, st = mlstm_step(qt[:, None], kt[:, None], vt[:, None],
+                           li[:, None], lf[:, None], st)
+        return st, None
+
+    init = init_mlstm_state(B, H, hd)
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          log_i.swapaxes(0, 1), log_f.swapaxes(0, 1))
+    st, _ = jax.lax.scan(body, init, xs)
+    return st
+
+
+def init_mlstm_state(batch: int, H: int, hd: int):
+    return {"C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "n": jnp.zeros((batch, H, hd), jnp.float32),
+            "m": jnp.full((batch, H), -1e30, jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_layout(cfg: XLSTMConfig) -> Layout:
+    d = cfg.d_model
+    # round the 4/3 up-projection to a lane/TP-friendly multiple of 128
+    dp = ((int(d * cfg.proj_factor_s) + 127) // 128) * 128
+    return {
+        "conv_w": ((cfg.conv_width, d), (None, None), "normal"),
+        "conv_b": ((d,), (None,), "zeros"),
+        "w_gates": ((d, 4 * d), ("model_d", "ff"), "normal"),
+        "r_gates": ((d, 4 * d), (None, "ff"), "normal"),
+        "b_gates": ((4 * d,), ("ff",), "zeros"),
+        "norm": ((d,), (None,), "zeros"),
+        "w_up": ((d, 2 * dp), ("model_d", "ff"), "normal"),
+        "w_down": ((dp, d), ("ff", "model_d"), "normal"),
+    }
+
+
+def slstm_scan(params, x, state):
+    """sLSTM over a sequence. x: (B, S, D). state: dict(c,n,m,h) each (B, D)."""
+    B, S, D = x.shape
+
+    def step(st, xt):
+        zall = xt @ params["w_gates"] + st["h"].astype(xt.dtype) @ params["r_gates"] \
+            + params["b_gates"]
+        z, i, f, o = jnp.split(zall.astype(jnp.float32), 4, axis=-1)
+        li = i
+        lf = jax.nn.log_sigmoid(f)
+        m_new = jnp.maximum(lf + st["m"], li)
+        ii = jnp.exp(li - m_new)
+        fi = jnp.exp(lf + st["m"] - m_new)
+        c = fi * st["c"] + ii * jnp.tanh(z)
+        n = fi * st["n"] + ii
+        h = jax.nn.sigmoid(o) * c / jnp.maximum(n, 1.0)
+        return {"c": c, "n": n, "m": m_new, "h": h}, h
+
+    st, hs = jax.lax.scan(step, state, x.swapaxes(0, 1))
+    return hs.swapaxes(0, 1).astype(x.dtype), st
+
+
+def slstm_block(params, x, cfg: XLSTMConfig, state=None):
+    from .rglru import _causal_conv1d
+    B, S, D = x.shape
+    conv_state = None if state is None else state["conv"]
+    xc, conv_tail = _causal_conv1d(x, params["conv_w"], params["conv_b"],
+                                   conv_state)
+    xc = jax.nn.silu(xc)
+    rec = init_slstm_state(B, D) if state is None else state["rec"]
+    h, rec = slstm_scan(params, xc, rec)
+    h = rms_norm(h, params["norm"])
+    up = h @ params["w_up"]
+    a, b = jnp.split(up, 2, axis=-1)
+    y = (jax.nn.gelu(a, approximate=True) * b) @ params["w_down"]
+    return y, {"rec": rec, "conv": conv_tail}
+
+
+def init_slstm_state(batch: int, d: int):
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32)}
+
+
+__all__ = [
+    "XLSTMConfig", "mlstm_layout", "slstm_layout", "mlstm_block", "slstm_block",
+    "init_mlstm_state", "init_slstm_state", "mlstm_parallel", "mlstm_chunked",
+    "mlstm_step", "slstm_scan",
+]

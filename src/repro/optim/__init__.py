@@ -1,0 +1,9 @@
+"""Optimizers and distributed-optimization utilities (pure JAX)."""
+
+from .adamw import (AdamWConfig, schedule, init_state, update, global_norm,
+                    zero1_specs, opt_state_specs)
+from .compression import quantize, dequantize, ef_accumulate, init_ef_state
+
+__all__ = ["AdamWConfig", "schedule", "init_state", "update", "global_norm",
+           "zero1_specs", "opt_state_specs", "quantize", "dequantize",
+           "ef_accumulate", "init_ef_state"]

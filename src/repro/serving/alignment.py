@@ -1,0 +1,80 @@
+"""Forced-alignment serving head: encoder emissions -> FLASH-BS Viterbi paths.
+
+This is the paper's workload running as a production operator: hubert-xlarge
+produces per-frame class posteriors (B, T, 504); a left-to-right HMM over the
+target transcription's states constrains the decode; FLASH-BS (dynamic beam)
+returns the per-frame alignment.  Batch shards over the data axis; the decode
+per sequence runs the full FLASH wavefront (lanes=None vectorised).
+
+`method`/`beam_width`/`parallelism` plumb the paper's adaptivity: the same
+serving binary turns resource knobs instead of swapping decoders.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import flash_bs_viterbi, flash_viterbi, viterbi_vanilla
+from repro.core.hmm import HMM
+
+
+@dataclasses.dataclass(frozen=True)
+class AlignmentConfig:
+    method: str = "flash_bs"       # flash | flash_bs | vanilla
+    beam_width: int = 128
+    parallelism: int = 8
+    chunk: int = 128
+
+
+def make_alignment_head(hmm_log_pi, hmm_log_A, cfg: AlignmentConfig):
+    """Returns align(emissions (B, T, K)) -> (paths (B, T) int32, scores (B,))."""
+
+    def one(em):
+        if cfg.method == "flash":
+            return flash_viterbi(hmm_log_pi, hmm_log_A, em,
+                                 parallelism=cfg.parallelism, lanes=None)
+        if cfg.method == "vanilla":
+            return viterbi_vanilla(hmm_log_pi, hmm_log_A, em)
+        return flash_bs_viterbi(hmm_log_pi, hmm_log_A, em,
+                                beam_width=cfg.beam_width,
+                                parallelism=cfg.parallelism, lanes=None,
+                                chunk=cfg.chunk)
+
+    return jax.jit(jax.vmap(one))
+
+
+def make_e2e_align_step(model, params_treedef_hint, hmm: HMM,
+                        cfg: AlignmentConfig, num_classes: int):
+    """Encoder forward + log-softmax emissions + Viterbi alignment, one jit.
+
+    The serving step for the hubert cells: batch {"embeds": (B, S, D)} ->
+    (paths (B, S), scores (B,)).
+    """
+    head = None  # built lazily inside jit from hmm params (closed over)
+
+    def step(params, batch):
+        x = batch["embeds"]
+        # encoder forward reusing the model's loss-path stack
+        from repro.models.transformer import _run_stack
+        from repro.models.common import rms_norm
+        h, _, _ = _run_stack(model.cfg, params, x.astype(model.cfg.dtype),
+                             jnp.arange(x.shape[1]), collect_kv=False)
+        h = rms_norm(h, params["ln_out"])
+        logits = (h @ params["head"]).astype(jnp.float32)
+        em = jax.nn.log_softmax(logits[..., :num_classes], axis=-1)
+
+        def one(e):
+            return flash_bs_viterbi(hmm.log_pi, hmm.log_A, e,
+                                    beam_width=cfg.beam_width,
+                                    parallelism=cfg.parallelism, lanes=None,
+                                    chunk=cfg.chunk)
+        return jax.vmap(one)(em)
+
+    return step
+
+
+__all__ = ["AlignmentConfig", "make_alignment_head", "make_e2e_align_step"]

@@ -1,0 +1,91 @@
+"""Batched request scheduler for the serving examples.
+
+Continuous-batching-lite: requests queue up, the scheduler packs up to
+`max_batch` compatible requests (same HMM / model), pads sequences to the
+bucket boundary, runs one fused decode, and fans results back out.  Buckets
+keep jit cache hits high (one compile per bucket, not per length).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import deque
+from typing import Any, Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    payload: Any                    # (T, K) emissions or token prompt
+    arrival: float = 0.0
+    result: Any = None
+    done: bool = False
+
+
+class BatchScheduler:
+    def __init__(self, decode_batch_fn: Callable, max_batch: int = 8,
+                 buckets: tuple[int, ...] = (128, 256, 512, 1024, 2048)):
+        self.fn = decode_batch_fn
+        self.max_batch = max_batch
+        self.buckets = sorted(buckets)
+        self.queue: deque[Request] = deque()
+        self._next_id = itertools.count()
+        self.stats = {"batches": 0, "requests": 0, "padded_frac": []}
+
+    def submit(self, payload) -> Request:
+        req = Request(rid=next(self._next_id), payload=payload,
+                      arrival=time.monotonic())
+        self.queue.append(req)
+        return req
+
+    def _bucket(self, length: int) -> int:
+        for b in self.buckets:
+            if length <= b:
+                return b
+        return self.buckets[-1]
+
+    def step(self) -> list[Request]:
+        """Run one batch; returns completed requests."""
+        if not self.queue:
+            return []
+        first = self.queue[0]
+        bucket = self._bucket(len(first.payload))
+        batch: list[Request] = []
+        rest: deque[Request] = deque()
+        while self.queue and len(batch) < self.max_batch:
+            r = self.queue.popleft()
+            if self._bucket(len(r.payload)) == bucket:
+                batch.append(r)
+            else:
+                rest.append(r)
+        self.queue.extendleft(reversed(rest))
+
+        lens = [len(r.payload) for r in batch]
+        K = batch[0].payload.shape[-1]
+        padded = np.zeros((len(batch), bucket, K), np.float32)
+        for i, r in enumerate(batch):
+            padded[i, :lens[i]] = r.payload
+            if lens[i] < bucket:  # pad frames: uniform emissions (no-op-ish)
+                padded[i, lens[i]:] = 0.0
+        outs = self.fn(padded)
+        paths, scores = outs
+        for i, r in enumerate(batch):
+            r.result = (np.asarray(paths[i][:lens[i]]), float(scores[i]))
+            r.done = True
+        self.stats["batches"] += 1
+        self.stats["requests"] += len(batch)
+        self.stats["padded_frac"].append(1 - np.mean(lens) / bucket)
+        return batch
+
+    def drain(self) -> list[Request]:
+        done = []
+        while self.queue:
+            done.extend(self.step())
+        return done
+
+
+__all__ = ["Request", "BatchScheduler"]

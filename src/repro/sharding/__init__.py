@@ -1,0 +1,7 @@
+"""Mesh axes, logical->physical sharding rules, and spec helpers."""
+
+from .rules import (ShardingRules, SINGLE_POD_RULES, MULTI_POD_RULES,
+                    logical, spec_tree_from_layout)
+
+__all__ = ["ShardingRules", "SINGLE_POD_RULES", "MULTI_POD_RULES", "logical",
+           "spec_tree_from_layout"]

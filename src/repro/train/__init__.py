@@ -1,0 +1,7 @@
+"""Training loop substrate."""
+
+from .train_step import (TrainConfig, init_train_state, abstract_train_state,
+                         train_state_specs, make_train_step)
+
+__all__ = ["TrainConfig", "init_train_state", "abstract_train_state",
+           "train_state_specs", "make_train_step"]

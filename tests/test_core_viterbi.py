@@ -1,0 +1,149 @@
+"""Correctness of the full Viterbi decoder family vs numpy references and
+brute force.  Keep the number of distinct jit shapes small (1 CPU core)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (erdos_renyi_hmm, left_to_right_hmm, random_emissions,
+                        sample_observations, path_score, relative_error,
+                        viterbi_vanilla, viterbi_checkpoint, flash_viterbi,
+                        flash_bs_viterbi, beam_static_viterbi,
+                        beam_static_mp_viterbi, viterbi_assoc, viterbi_decode)
+from repro.core import reference as ref
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.key(42)
+    k1, k2 = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, 48, edge_prob=0.3)
+    em = random_emissions(k2, 96, 48)
+    npath, nscore = ref.viterbi_numpy(np.asarray(hmm.log_pi),
+                                      np.asarray(hmm.log_A), np.asarray(em))
+    return hmm, em, npath, nscore
+
+
+def _check_exact(problem, path, score):
+    hmm, em, npath, nscore = problem
+    assert np.allclose(float(score), nscore, rtol=1e-5)
+    ps = ref.path_score_numpy(np.asarray(hmm.log_pi), np.asarray(hmm.log_A),
+                              np.asarray(em), np.asarray(path))
+    assert np.allclose(ps, nscore, rtol=1e-5)   # decoded path is optimal
+    assert np.array_equal(np.asarray(path), npath)
+
+
+def test_brute_force_tiny():
+    key = jax.random.key(7)
+    k1, k2 = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, 4, num_obs=5, edge_prob=0.7)
+    em = random_emissions(k2, 5, 4)
+    bf_path, bf_score = ref.brute_force(np.asarray(hmm.log_pi),
+                                        np.asarray(hmm.log_A), np.asarray(em))
+    path, score = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    assert np.array_equal(np.asarray(path), bf_path)
+    assert np.allclose(float(score), bf_score, rtol=1e-5)
+
+
+def test_vanilla(problem):
+    hmm, em, *_ = problem
+    _check_exact(problem, *viterbi_vanilla(hmm.log_pi, hmm.log_A, em))
+
+
+def test_checkpoint(problem):
+    hmm, em, *_ = problem
+    _check_exact(problem, *viterbi_checkpoint(hmm.log_pi, hmm.log_A, em))
+
+
+def test_sieve_mp_reference(problem):
+    hmm, em, npath, nscore = problem
+    path, score = ref.sieve_mp_numpy(np.asarray(hmm.log_pi),
+                                     np.asarray(hmm.log_A), np.asarray(em))
+    assert np.array_equal(path, npath)
+    assert np.allclose(score, nscore, rtol=1e-5)
+
+
+@pytest.mark.parametrize("P", [1, 4, 7])
+def test_flash(problem, P):
+    hmm, em, *_ = problem
+    _check_exact(problem, *flash_viterbi(hmm.log_pi, hmm.log_A, em,
+                                         parallelism=P))
+
+
+def test_flash_lanes_vs_full(problem):
+    hmm, em, *_ = problem
+    p1, s1 = flash_viterbi(hmm.log_pi, hmm.log_A, em, parallelism=8, lanes=2)
+    p2, s2 = flash_viterbi(hmm.log_pi, hmm.log_A, em, parallelism=8, lanes=None)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert np.allclose(float(s1), float(s2))
+
+
+def test_flash_bs_exact_when_beam_full(problem):
+    hmm, em, *_ = problem
+    K = em.shape[1]
+    _check_exact(problem, *flash_bs_viterbi(hmm.log_pi, hmm.log_A, em,
+                                            beam_width=K, parallelism=4,
+                                            chunk=16))
+
+
+def test_beam_static_exact_when_full(problem):
+    hmm, em, *_ = problem
+    K = em.shape[1]
+    _check_exact(problem, *beam_static_viterbi(hmm.log_pi, hmm.log_A, em, B=K))
+    _check_exact(problem, *beam_static_mp_viterbi(hmm.log_pi, hmm.log_A, em,
+                                                  beam_width=K, parallelism=4))
+
+
+def test_assoc(problem):
+    hmm, em, *_ = problem
+    _check_exact(problem, *viterbi_assoc(hmm.log_pi, hmm.log_A, em))
+
+
+def test_beam_error_decreases(problem):
+    """Paper Fig. 9: narrower beams trade accuracy; error at B=K is 0."""
+    hmm, em, _, nscore = problem
+    lp, lA = np.asarray(hmm.log_pi), np.asarray(hmm.log_A)
+    errs = []
+    for B in (4, 16, 48):
+        path, _ = flash_bs_viterbi(hmm.log_pi, hmm.log_A, em, beam_width=B,
+                                   parallelism=4, chunk=16)
+        ps = ref.path_score_numpy(lp, lA, np.asarray(em), np.asarray(path))
+        errs.append(abs(nscore - ps) / abs(nscore))
+    assert errs[-1] <= 1e-5            # full beam exact
+    assert errs[0] >= errs[-1]         # narrow beam no better than full
+
+
+def test_api_dispatch(problem):
+    hmm, em, _, nscore = problem
+    for method in ("vanilla", "checkpoint", "flash", "assoc"):
+        _, score = viterbi_decode(em, hmm.log_pi, hmm.log_A, method=method)
+        assert np.allclose(float(score), nscore, rtol=1e-5)
+    with pytest.raises(ValueError):
+        viterbi_decode(em, hmm.log_pi, hmm.log_A, method="nope")
+
+
+def test_left_to_right_alignment():
+    """Forced alignment on a Bakis HMM: path must be monotone nondecreasing."""
+    key = jax.random.key(3)
+    k1, k2 = jax.random.split(key)
+    hmm = left_to_right_hmm(k1, 32, 16)
+    em = random_emissions(k2, 64, 32)
+    path, _ = flash_viterbi(hmm.log_pi, hmm.log_A, em, parallelism=4)
+    path = np.asarray(path)
+    assert path[0] == 0                       # starts at the first state
+    assert np.all(np.diff(path) >= 0)         # left-to-right monotone
+    assert np.all(np.diff(path) <= 2)         # max_skip = 2
+
+
+def test_sampled_observations_decode():
+    """Decoding sampled data recovers a high-likelihood path (score of decoded
+    path >= score of the true generating path)."""
+    key = jax.random.key(11)
+    k1, k2 = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, 24, num_obs=12, edge_prob=0.5)
+    states, obs = sample_observations(k2, hmm, 48)
+    em = hmm.emissions(obs)
+    path, score = flash_viterbi(hmm.log_pi, hmm.log_A, em, parallelism=4)
+    true_score = path_score(hmm.log_pi, hmm.log_A, em, states)
+    assert float(score) >= float(true_score) - 1e-4

@@ -1,0 +1,95 @@
+"""Hypothesis property tests for the system's invariants.
+
+Shapes are drawn from small pools (every distinct (K, T, P) recompiles on the
+single CPU core, so pools keep the jit cache warm across examples)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import (erdos_renyi_hmm, random_emissions, flash_viterbi,
+                        flash_bs_viterbi, viterbi_vanilla, path_score)
+from repro.core import reference as ref
+
+_SETTINGS = dict(max_examples=12, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow])
+
+
+@st.composite
+def problems(draw):
+    K = draw(st.sampled_from([8, 24]))
+    T = draw(st.sampled_from([9, 32, 57]))
+    p = draw(st.sampled_from([0.3, 0.8]))
+    seed = draw(st.integers(0, 2**16))
+    return K, T, p, seed
+
+
+def _mk(K, T, p, seed):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    hmm = erdos_renyi_hmm(k1, K, edge_prob=p)
+    em = random_emissions(k2, T, K)
+    return hmm, em
+
+
+@given(problems(), st.sampled_from([1, 2, 4]))
+@settings(**_SETTINGS)
+def test_flash_score_equals_vanilla(prob, P):
+    """INVARIANT: FLASH returns an optimal-score path for any HMM/emissions."""
+    hmm, em = _mk(*prob)
+    vp, vs = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    fp, fs = flash_viterbi(hmm.log_pi, hmm.log_A, em, parallelism=P)
+    assert np.allclose(float(fs), float(vs), rtol=1e-5, atol=1e-4)
+    # the decoded path achieves the optimal score (tie-robust check)
+    fscore = path_score(hmm.log_pi, hmm.log_A, em, fp)
+    assert np.allclose(float(fscore), float(vs), rtol=1e-5, atol=1e-4)
+
+
+@given(problems())
+@settings(**_SETTINGS)
+def test_full_beam_is_exact(prob):
+    """INVARIANT: FLASH-BS with beam_width == K equals exact decoding."""
+    hmm, em = _mk(*prob)
+    K = em.shape[1]
+    _, vs = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    bp, bs = flash_bs_viterbi(hmm.log_pi, hmm.log_A, em, beam_width=K,
+                              parallelism=2, chunk=8)
+    bscore = path_score(hmm.log_pi, hmm.log_A, em, bp)
+    assert np.allclose(float(bscore), float(vs), rtol=1e-5, atol=1e-4)
+
+
+@given(problems())
+@settings(**_SETTINGS)
+def test_beam_score_upper_bounded(prob):
+    """INVARIANT: any beam path's score <= the optimal score."""
+    hmm, em = _mk(*prob)
+    _, vs = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    bp, _ = flash_bs_viterbi(hmm.log_pi, hmm.log_A, em, beam_width=4,
+                             parallelism=2, chunk=8)
+    bscore = path_score(hmm.log_pi, hmm.log_A, em, bp)
+    assert float(bscore) <= float(vs) + 1e-4
+
+
+@given(problems())
+@settings(**_SETTINGS)
+def test_path_states_in_range(prob):
+    hmm, em = _mk(*prob)
+    K = em.shape[1]
+    path, _ = flash_viterbi(hmm.log_pi, hmm.log_A, em, parallelism=2)
+    p = np.asarray(path)
+    assert p.shape == (em.shape[0],)
+    assert ((0 <= p) & (p < K)).all()
+
+
+@given(st.integers(0, 2**16))
+@settings(**_SETTINGS)
+def test_emission_shift_invariance(seed):
+    """INVARIANT: adding a constant to all emissions at a timestep shifts the
+    score but never changes the argmax path (log-domain linearity)."""
+    hmm, em = _mk(16, 32, 0.5, seed)
+    p1, s1 = flash_viterbi(hmm.log_pi, hmm.log_A, em, parallelism=2)
+    em2 = em.at[5].add(7.5)
+    p2, s2 = flash_viterbi(hmm.log_pi, hmm.log_A, em2, parallelism=2)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert np.allclose(float(s2) - float(s1), 7.5, atol=1e-3)
