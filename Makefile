@@ -1,0 +1,22 @@
+# Tier-1 verification and common entry points.  `make test` is the command
+# README and CI agree on; it matches ROADMAP.md's tier-1 invocation.
+
+PY ?= python
+
+.PHONY: test test-fast bench example-quickstart example-streaming
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
+
+test-fast:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q \
+	    tests/test_core_viterbi.py tests/test_kernels.py tests/test_online.py
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run
+
+example-quickstart:
+	$(PY) examples/quickstart.py
+
+example-streaming:
+	$(PY) examples/streaming_decode.py

@@ -1,0 +1,81 @@
+"""Fig. 11 (beyond-paper): streaming decode — latency-to-first-commit and peak
+live-state memory vs feed chunk size and beam width.
+
+The offline decoders pay O(T) latency before the first state is known; the
+online subsystem commits prefixes at convergence points, so the interesting
+numbers are (a) wall time until the first committed state, (b) mean commit
+lag in steps, and (c) the peak live window (the Šrámek bounded-memory story),
+for the exact decoder across chunk sizes and the beam decoder across widths.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+
+from repro.core import erdos_renyi_hmm, random_emissions, viterbi_vanilla
+from repro.core.online import OnlineBeamDecoder, OnlineViterbiDecoder
+from .common import emit
+
+
+def _stream(decoder, em, chunk_size: int):
+    """Feed em through decoder; returns per-stream metrics."""
+    T = em.shape[0]
+    peak_bytes = 0
+    first_commit = None
+    lags = []
+    t0 = time.perf_counter()
+    for s in range(0, T, chunk_size):
+        got = decoder.feed(em[s:s + chunk_size])
+        if first_commit is None and got.shape[0]:
+            first_commit = time.perf_counter() - t0
+        peak_bytes = max(peak_bytes, decoder.live_state_bytes())
+        lags.append(decoder.lag)
+    decoder.flush()
+    total = time.perf_counter() - t0
+    if first_commit is None:
+        first_commit = total
+    return dict(first_commit_s=first_commit, total_s=total,
+                peak_bytes=peak_bytes, mean_lag=float(np.mean(lags)),
+                peak_lag=decoder.stats["peak_lag"],
+                forced=decoder.stats["forced"])
+
+
+def run(full: bool = False):
+    K = 512 if full else 128
+    T = 4096 if full else 1024
+    key = jax.random.key(11)
+    k1, k2 = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, K, edge_prob=0.253)
+    em = random_emissions(k2, T, K)
+    viterbi_vanilla(hmm.log_pi, hmm.log_A, em)  # warm the offline baseline jit
+
+    for chunk_size in (16, 64, 256):
+        # warm-up stream compiles the chunk shapes, measured stream is clean
+        _stream(OnlineViterbiDecoder(hmm.log_pi, hmm.log_A), em, chunk_size)
+        m = _stream(OnlineViterbiDecoder(hmm.log_pi, hmm.log_A), em, chunk_size)
+        emit(f"fig11/exact_c{chunk_size}", m["first_commit_s"],
+             f"total_us={m['total_s'] * 1e6:.1f};peak_live_bytes={m['peak_bytes']};"
+             f"mean_lag={m['mean_lag']:.1f};peak_lag={m['peak_lag']}")
+
+    for B in (32, 128):
+        mk = lambda: OnlineBeamDecoder(hmm.log_pi, hmm.log_A, beam_width=B,
+                                       kchunk=min(128, K))
+        _stream(mk(), em, 64)
+        m = _stream(mk(), em, 64)
+        emit(f"fig11/beam_B{B}_c64", m["first_commit_s"],
+             f"total_us={m['total_s'] * 1e6:.1f};peak_live_bytes={m['peak_bytes']};"
+             f"mean_lag={m['mean_lag']:.1f};peak_lag={m['peak_lag']}")
+
+    # bounded-lag profile: the forced-flush knob trades exactness for latency
+    m = _stream(OnlineViterbiDecoder(hmm.log_pi, hmm.log_A, max_lag=64), em, 64)
+    emit("fig11/exact_c64_lag64", m["first_commit_s"],
+         f"total_us={m['total_s'] * 1e6:.1f};peak_live_bytes={m['peak_bytes']};"
+         f"mean_lag={m['mean_lag']:.1f};forced={m['forced']}")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -18,13 +18,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (table1_overall, fig7_scaling, fig8_density, fig9_beam,
-                   fig10_kernel, roofline_table)
+                   fig10_kernel, fig11_streaming, roofline_table)
     suites = {
         "table1": table1_overall.run,
         "fig7": fig7_scaling.run,
         "fig8": fig8_density.run,
         "fig9": fig9_beam.run,
         "fig10": fig10_kernel.run,
+        "fig11": fig11_streaming.run,
         "roofline": roofline_table.run,
     }
     picked = args.only.split(",") if args.only else list(suites)

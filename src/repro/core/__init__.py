@@ -9,6 +9,8 @@ from .flash import flash_viterbi, plan_padding, pad_emissions, chunked_vmap
 from .flash_bs import flash_bs_viterbi
 from .beam_static import beam_static_viterbi, beam_static_mp_viterbi
 from .assoc import viterbi_assoc
+from .online import (OnlineViterbiDecoder, OnlineBeamDecoder,
+                     viterbi_online, viterbi_online_beam)
 from .api import viterbi_decode, viterbi_decode_hmm, METHODS
 
 __all__ = [
@@ -17,5 +19,7 @@ __all__ = [
     "viterbi_vanilla", "viterbi_vanilla_batched", "viterbi_checkpoint",
     "flash_viterbi", "plan_padding", "pad_emissions", "chunked_vmap",
     "flash_bs_viterbi", "beam_static_viterbi", "beam_static_mp_viterbi",
-    "viterbi_assoc", "viterbi_decode", "viterbi_decode_hmm", "METHODS",
+    "viterbi_assoc", "OnlineViterbiDecoder", "OnlineBeamDecoder",
+    "viterbi_online", "viterbi_online_beam",
+    "viterbi_decode", "viterbi_decode_hmm", "METHODS",
 ]

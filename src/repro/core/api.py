@@ -4,10 +4,12 @@ and benchmarks.
     path, score = viterbi_decode(emissions, log_pi, log_A, method="flash", ...)
 
 `method` selects among the paper's algorithm ("flash", "flash_bs"), the paper's
-baselines ("vanilla", "checkpoint", "beam_static", "beam_static_mp") and the
-beyond-paper associative-scan schedule ("assoc").  Tunables `parallelism`,
-`lanes`, `beam_width` and `chunk` realise the paper's adaptivity story: one
-operator, resource profile chosen per deployment.
+baselines ("vanilla", "checkpoint", "beam_static", "beam_static_mp"), the
+beyond-paper associative-scan schedule ("assoc") and the streaming decoders
+("online", "online_beam" — chunk-fed one-shot; for true incremental use, hold
+an `OnlineViterbiDecoder` / `serving.stream.StreamSession` directly).  Tunables
+`parallelism`, `lanes`, `beam_width` and `chunk` realise the paper's adaptivity
+story: one operator, resource profile chosen per deployment.
 """
 
 from __future__ import annotations
@@ -24,9 +26,11 @@ from .flash import flash_viterbi
 from .flash_bs import flash_bs_viterbi
 from .beam_static import beam_static_viterbi, beam_static_mp_viterbi
 from .assoc import viterbi_assoc
+from .online import viterbi_online, viterbi_online_beam
 
 METHODS = ("vanilla", "checkpoint", "flash", "flash_bs",
-           "beam_static", "beam_static_mp", "assoc")
+           "beam_static", "beam_static_mp", "assoc",
+           "online", "online_beam")
 
 
 def viterbi_decode(
@@ -40,6 +44,8 @@ def viterbi_decode(
     beam_width: int = 128,
     chunk: int = 128,
     seg_len: int | None = None,
+    stream_chunk: int = 64,
+    max_lag: int | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode the max-likelihood state path of (T, K) emissions.
 
@@ -64,6 +70,13 @@ def viterbi_decode(
                                       parallelism=parallelism, lanes=lanes)
     if method == "assoc":
         return viterbi_assoc(log_pi, log_A, emissions)
+    if method == "online":
+        return viterbi_online(log_pi, log_A, emissions,
+                              chunk_size=stream_chunk, max_lag=max_lag)
+    if method == "online_beam":
+        return viterbi_online_beam(log_pi, log_A, emissions,
+                                   beam_width=beam_width, kchunk=chunk,
+                                   chunk_size=stream_chunk, max_lag=max_lag)
     raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
 
 

@@ -1,0 +1,435 @@
+"""On-line (streaming) Viterbi decoding with convergence-point commitment.
+
+Every decoder in this package so far is *offline*: it sees the full (T, K)
+emission matrix before emitting a single state.  This module adds the
+streaming counterpart (Šrámek, Brejová & Vinař's On-line Viterbi, adapted to
+the FLASH substrate): emissions arrive in chunks, and committed path prefixes
+are returned as soon as they are provably final.
+
+The key observation is that the backpointer maps psi_t : states(t) -> states(t-1)
+form a function composition; once the composition of the maps from the current
+frontier back to some past time tau collapses to a *single* value, every
+surviving hypothesis — including whichever one eventually wins — passes through
+that state.  The prefix up to tau is therefore exact and can be emitted and its
+backpointers freed.  Expected uncommitted-window length is O(K log K) for
+well-behaved models (the on-line Viterbi bound), so live memory is decoupled
+from T.
+
+Two variants:
+
+  * ``OnlineViterbiDecoder`` — exact.  The per-chunk DP runs through
+    ``kernels.ops.viterbi_chunk_step``, i.e. the same fused Pallas forward
+    kernel as the offline path (transition matrix VMEM-resident, emissions
+    streamed), not a per-timestep Python loop.  With ``max_lag=None`` the
+    assembled path is bit-identical to ``viterbi_vanilla``.
+
+  * ``OnlineBeamDecoder`` — FLASH-BS's compact O(B) beam state made
+    streaming.  Reuses ``flash_bs._beam_transition`` (the chunked streaming
+    top-B merge); the convergence check composes the per-step *beam-slot*
+    backpointers, so live state is O(W * B), independent of K.
+
+Both support a bounded-lag forced flush: if the uncommitted window exceeds
+``max_lag`` steps, the oldest states are committed along the currently-best
+hypothesis (the standard fixed-lag approximation).  Hypotheses inconsistent
+with a forced commit are masked out afterwards so later commits stay
+consistent with what was already emitted.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hmm import NEG_INF
+from .flash_bs import _SENTINEL, _beam_transition, _stream_top_b
+
+
+# ---------------------------------------------------------------------------
+# Shared window algebra
+# ---------------------------------------------------------------------------
+
+def _latest_convergence(rows: list[np.ndarray], lo: int):
+    """Latest row index i >= lo at which the pointer composition collapses.
+
+    ``rows[i]`` maps identities at time base+i to identities at time base+i-1.
+    Walking backward from the frontier, the first time the composed image is a
+    single value is the *latest* convergence point (a collapsed composition
+    stays collapsed further back).  Returns (i, value) or (None, None).
+    """
+    if len(rows) == 0:
+        return None, None
+    cur = np.arange(rows[-1].shape[0])
+    for i in range(len(rows) - 1, -1, -1):
+        cur = rows[i][cur]
+        if i >= lo and (cur == cur[0]).all():
+            return i, int(cur[0])
+    return None, None
+
+
+class _StreamingDecoder:
+    """Commit/window bookkeeping shared by the exact and beam decoders.
+
+    Subclasses provide the DP carry and the pointer rows; this base tracks the
+    committed prefix, the window base time, lag statistics and forced flushes.
+    Window row i always maps (state or slot) at absolute time ``_base + i`` to
+    its predecessor at ``_base + i - 1``; committed states cover times
+    ``0 .. n_committed - 1`` and ``_base == max(n_committed, 1)``.
+    """
+
+    def __init__(self, max_lag: int | None):
+        if max_lag is not None and max_lag < 1:
+            raise ValueError(f"max_lag must be >= 1, got {max_lag}")
+        self.max_lag = max_lag
+        self._committed: list[int] = []
+        self._t = 0          # total timesteps fed
+        self._base = 1
+        self._finished = False
+        self.score: float | None = None
+        self.stats = {"feeds": 0, "commits": 0, "forced": 0, "peak_lag": 0}
+
+    # -- subclass surface ---------------------------------------------------
+    def _rows(self) -> list[np.ndarray]:
+        raise NotImplementedError
+
+    def _drop_rows(self, n: int) -> None:
+        raise NotImplementedError
+
+    def _frontier_best(self) -> tuple[int, float]:
+        """(identity at time t-1 of the best hypothesis, its score)."""
+        raise NotImplementedError
+
+    def _identity_to_state(self, i_row_plus_1: int, ident: int) -> int:
+        """Map a window identity (row index + 1 convention, see _collect)."""
+        raise NotImplementedError
+
+    def _mask_inconsistent(self, f_ident: int) -> None:
+        """Suppress hypotheses whose ancestor at the new base-1 != f_ident."""
+        raise NotImplementedError
+
+    # -- shared machinery ---------------------------------------------------
+    @property
+    def n_committed(self) -> int:
+        return len(self._committed)
+
+    @property
+    def lag(self) -> int:
+        """Number of fed timesteps whose state has not been committed yet."""
+        return self._t - self.n_committed
+
+    @property
+    def path(self) -> np.ndarray:
+        """States committed so far (a prefix of the final decoded path)."""
+        return np.asarray(self._committed, dtype=np.int32)
+
+    def _lo(self) -> int:
+        # lowest row index whose composition tells us something new
+        return self.n_committed - self._base + 1
+
+    def _collect(self, rows, i_top: int, ident: int) -> tuple[list[int], int]:
+        """Backtrack ``ident`` (at time _base + i_top) down to time n_committed.
+
+        Returns (states oldest-first, identity at the oldest time).
+        """
+        lo = self._lo()
+        seg = [self._identity_to_state(i_top + 1, ident)]
+        for i in range(i_top, lo - 1, -1):
+            ident = int(rows[i][ident])
+            seg.append(self._identity_to_state(i, ident))
+        seg.reverse()
+        return seg, ident
+
+    def _try_commit(self) -> list[int]:
+        rows = self._rows()
+        i_conv, ident = _latest_convergence(rows, self._lo())
+        if i_conv is None:
+            return []
+        seg, _ = self._collect(rows, i_conv - 1, ident)
+        self._committed.extend(seg)
+        self._drop_rows(i_conv)
+        self._base += i_conv
+        self.stats["commits"] += 1
+        return seg
+
+    def _force_flush(self, m: int) -> list[int]:
+        """Commit the oldest ``m`` window steps along the best hypothesis."""
+        rows = self._rows()
+        ident, _ = self._frontier_best()
+        seg, _ = self._collect(rows, len(rows) - 1, ident)
+        seg = seg[:m]
+        self._committed.extend(seg)
+        drop = self.n_committed - self._base  # rows for times <= n_committed-1
+        self._drop_rows(drop)
+        self._base += drop
+        # pin future hypotheses to the committed seam state
+        f_state = seg[-1]
+        self._mask_inconsistent(f_state)
+        self.stats["forced"] += 1
+        return seg
+
+    def _after_feed(self) -> np.ndarray:
+        self.stats["feeds"] += 1
+        new = self._try_commit()
+        if self.max_lag is not None and self.lag > self.max_lag:
+            new += self._force_flush(self.lag - self.max_lag)
+        self.stats["peak_lag"] = max(self.stats["peak_lag"], self.lag)
+        return np.asarray(new, dtype=np.int32)
+
+    def flush(self) -> tuple[np.ndarray, float]:
+        """Commit everything fed so far; returns (tail states, path score).
+
+        After flush the decoder is finished; ``path`` holds the full decode.
+        """
+        if self._finished:
+            return np.zeros((0,), np.int32), self.score
+        self._finished = True
+        if self._t == 0:
+            self.score = float("nan")
+            return np.zeros((0,), np.int32), self.score
+        rows = self._rows()
+        ident, score = self._frontier_best()
+        seg, _ = self._collect(rows, len(rows) - 1, ident)
+        self._committed.extend(seg)
+        self._drop_rows(len(rows))
+        self._base = self._t
+        self.score = score
+        return np.asarray(seg, dtype=np.int32), score
+
+    def _check_open(self, chunk) -> None:
+        if self._finished:
+            raise RuntimeError("decoder already flushed")
+        if chunk.ndim != 2:
+            raise ValueError(f"expected (C, K) chunk, got shape {chunk.shape}")
+
+
+# ---------------------------------------------------------------------------
+# Exact streaming decoder
+# ---------------------------------------------------------------------------
+
+class OnlineViterbiDecoder(_StreamingDecoder):
+    """Incremental exact Viterbi: feed (C, K) chunks, get committed prefixes.
+
+        dec = OnlineViterbiDecoder(log_pi, log_A)
+        for chunk in emission_stream:
+            prefix = dec.feed(chunk)      # (n,) newly-final states, maybe empty
+        tail, score = dec.flush()
+
+    With ``max_lag=None`` (default) commits happen only at convergence points
+    and the assembled path is exactly the offline Viterbi path.  With
+    ``max_lag=L`` the uncommitted window never exceeds L steps (fixed-lag
+    smoothing semantics — the forced part of the path is approximate).
+    """
+
+    def __init__(self, log_pi, log_A, *, max_lag: int | None = None,
+                 bt: int = 8):
+        super().__init__(max_lag)
+        self.log_pi = jnp.asarray(log_pi)
+        self.log_A = jnp.asarray(log_A)
+        self.K = int(self.log_A.shape[0])
+        self.bt = bt
+        self._delta: jax.Array | None = None
+        self._psis: list[np.ndarray] = []   # each (c, K); together rows base..t-1
+
+    # -- window plumbing ----------------------------------------------------
+    def _rows(self) -> list[np.ndarray]:
+        if len(self._psis) > 1:
+            self._psis = [np.concatenate(self._psis, axis=0)]
+        return self._psis[0] if self._psis else []
+
+    def _drop_rows(self, n: int) -> None:
+        if n and self._psis:
+            self._psis = [self._psis[0][n:]]
+
+    def _frontier_best(self) -> tuple[int, float]:
+        q = int(jnp.argmax(self._delta))
+        return q, float(self._delta[q])
+
+    def _identity_to_state(self, i, ident: int) -> int:
+        return int(ident)   # identities *are* states in the exact decoder
+
+    def _mask_inconsistent(self, f_state: int) -> None:
+        rows = self._rows()
+        anc = np.arange(self.K)
+        for i in range(len(rows) - 1, -1, -1):
+            anc = rows[i][anc]
+        keep = jnp.asarray(anc == f_state)
+        self._delta = jnp.where(keep, self._delta, self._delta + 4.0 * NEG_INF)
+
+    # -- feeding ------------------------------------------------------------
+    def feed(self, em_chunk) -> np.ndarray:
+        """Advance the DP by one emission chunk; returns newly committed states."""
+        from repro.kernels.ops import viterbi_chunk_step
+        em_chunk = jnp.asarray(em_chunk)
+        self._check_open(em_chunk)
+        if em_chunk.shape[0] == 0:
+            return np.zeros((0,), np.int32)
+        if self._delta is None:
+            self._delta = self.log_pi + em_chunk[0]
+            self._t = 1
+            em_chunk = em_chunk[1:]
+        if em_chunk.shape[0]:
+            psi, self._delta = viterbi_chunk_step(
+                self.log_A, em_chunk, self._delta, bt=self.bt)
+            self._psis.append(np.asarray(psi))
+            self._t += int(em_chunk.shape[0])
+        return self._after_feed()
+
+    def live_state_bytes(self) -> int:
+        """Current live decoder state (the Fig. 11 memory metric)."""
+        rows = self._rows()
+        return len(rows) * self.K * 4 + self.K * 8
+
+
+# ---------------------------------------------------------------------------
+# Streaming dynamic-beam decoder
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("B", "kchunk"))
+def _beam_init(log_pi, em0, B: int, kchunk: int):
+    v = log_pi + em0
+    return _stream_top_b(
+        lambda c: jax.lax.dynamic_slice(v, (c * kchunk,), (kchunk,)),
+        v.shape[0], kchunk, B)
+
+
+@partial(jax.jit, static_argnames=("B", "kchunk"))
+def _beam_chunk_scan(log_A, em_chunk, scores, states, B: int, kchunk: int):
+    def step(carry, em_t):
+        sc, st = carry
+        ns, nst, nfrom = _beam_transition(log_A, em_t, sc, st, kchunk, B)
+        return (ns, nst), (nst, nfrom)
+
+    (sc, st), (sts, froms) = jax.lax.scan(step, (scores, states), em_chunk)
+    return sc, st, sts, froms
+
+
+class OnlineBeamDecoder(_StreamingDecoder):
+    """Streaming FLASH-BS: O(B) beam carry + O(W * B) window, K never live.
+
+    The convergence check runs over *beam-slot* backpointers: once every slot
+    of the current beam traces back to the same past slot, that slot's state
+    is committed.  With ``beam_width >= K`` this is exact decoding (ties
+    aside); narrower beams inherit FLASH-BS's accuracy/memory trade-off
+    (paper Fig. 9) with streaming latency on top.
+    """
+
+    def __init__(self, log_pi, log_A, *, beam_width: int = 128,
+                 kchunk: int = 128, max_lag: int | None = None):
+        super().__init__(max_lag)
+        log_pi = jnp.asarray(log_pi)
+        log_A = jnp.asarray(log_A)
+        K = int(log_A.shape[0])
+        self.K = K
+        self.B = int(min(beam_width, K))
+        kchunk = int(min(kchunk, K))
+        # pad K to a kchunk multiple; fake states get sentinel scores so they
+        # never displace real candidates (same scheme as flash_bs_viterbi)
+        K_pad = -(-K // kchunk) * kchunk
+        if K_pad != K:
+            log_A = jnp.pad(log_A, ((0, K_pad - K), (0, K_pad - K)),
+                            constant_values=_SENTINEL / 2)
+            log_pi = jnp.pad(log_pi, (0, K_pad - K),
+                             constant_values=_SENTINEL / 2)
+        self.K_pad = K_pad
+        self.kchunk = kchunk
+        self.log_pi = log_pi
+        self.log_A = log_A
+        self._scores: jax.Array | None = None
+        self._states: jax.Array | None = None
+        self._froms: list[np.ndarray] = []    # row i: slots(base+i)->slots(base+i-1)
+        self._sstates: list[np.ndarray] = []  # entry j: slot states at time base-1+j
+
+    # -- window plumbing ----------------------------------------------------
+    def _rows(self) -> list[np.ndarray]:
+        return self._froms
+
+    def _drop_rows(self, n: int) -> None:
+        if n:
+            self._froms = self._froms[n:]
+            self._sstates = self._sstates[n:]
+
+    def _frontier_best(self) -> tuple[int, float]:
+        b = int(jnp.argmax(self._scores))
+        return b, float(self._scores[b])
+
+    def _identity_to_state(self, i, slot: int) -> int:
+        return int(self._sstates[i][slot])
+
+    def _mask_inconsistent(self, f_state: int) -> None:
+        rows = self._rows()
+        anc = np.arange(self.B)
+        for i in range(len(rows) - 1, -1, -1):
+            anc = rows[i][anc]
+        keep = jnp.asarray(self._sstates[0][anc] == f_state)
+        self._scores = jnp.where(keep, self._scores,
+                                 self._scores + 4.0 * NEG_INF)
+
+    # -- feeding ------------------------------------------------------------
+    def feed(self, em_chunk) -> np.ndarray:
+        """Advance the beam by one emission chunk; returns committed states."""
+        em_chunk = jnp.asarray(em_chunk)
+        self._check_open(em_chunk)
+        if em_chunk.shape[0] == 0:
+            return np.zeros((0,), np.int32)
+        if self.K_pad != self.K and em_chunk.shape[1] == self.K:
+            em_chunk = jnp.pad(em_chunk, ((0, 0), (0, self.K_pad - self.K)),
+                               constant_values=_SENTINEL / 2)
+        if self._scores is None:
+            self._scores, self._states = _beam_init(
+                self.log_pi, em_chunk[0], self.B, self.kchunk)
+            self._sstates.append(np.asarray(self._states))
+            self._t = 1
+            em_chunk = em_chunk[1:]
+        if em_chunk.shape[0]:
+            self._scores, self._states, sts, froms = _beam_chunk_scan(
+                self.log_A, em_chunk, self._scores, self._states,
+                self.B, self.kchunk)
+            sts, froms = np.asarray(sts), np.asarray(froms)
+            for r in range(sts.shape[0]):
+                self._sstates.append(sts[r])
+                self._froms.append(froms[r])
+            self._t += int(em_chunk.shape[0])
+        return self._after_feed()
+
+    def live_state_bytes(self) -> int:
+        """Current live decoder state: O(W * B), decoupled from K."""
+        return len(self._froms) * self.B * 8 + self.B * 8
+
+
+# ---------------------------------------------------------------------------
+# One-shot wrappers (offline signature over the streaming engine)
+# ---------------------------------------------------------------------------
+
+def viterbi_online(log_pi, log_A, em, *, chunk_size: int = 64,
+                   max_lag: int | None = None, bt: int = 8):
+    """Decode (T, K) emissions by streaming them chunk-by-chunk.
+
+    Equivalent to ``viterbi_vanilla`` output-wise (bit-identical when
+    ``max_lag=None``); exists so the online path slots into ``viterbi_decode``
+    and the benchmarks.  Returns (path (T,) int32, score).
+    """
+    dec = OnlineViterbiDecoder(log_pi, log_A, max_lag=max_lag, bt=bt)
+    T = em.shape[0]
+    for s in range(0, T, chunk_size):
+        dec.feed(em[s:s + chunk_size])
+    _, score = dec.flush()
+    return jnp.asarray(dec.path), jnp.asarray(score, dtype=jnp.float32)
+
+
+def viterbi_online_beam(log_pi, log_A, em, *, beam_width: int = 128,
+                        chunk_size: int = 64, kchunk: int = 128,
+                        max_lag: int | None = None):
+    """Streaming beam decode of (T, K) emissions; returns (path, score)."""
+    dec = OnlineBeamDecoder(log_pi, log_A, beam_width=beam_width,
+                            kchunk=kchunk, max_lag=max_lag)
+    T = em.shape[0]
+    for s in range(0, T, chunk_size):
+        dec.feed(em[s:s + chunk_size])
+    _, score = dec.flush()
+    return jnp.asarray(dec.path), jnp.asarray(score, dtype=jnp.float32)
+
+
+__all__ = ["OnlineViterbiDecoder", "OnlineBeamDecoder",
+           "viterbi_online", "viterbi_online_beam"]

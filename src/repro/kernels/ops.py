@@ -53,6 +53,9 @@ def tropical_matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None
     return vals[:I, :J], args[:I, :J]
 
 
+_ref_fwd_jit = jax.jit(_ref.viterbi_forward_ref)
+
+
 def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array, *,
                     bt: int = 8, interpret: bool | None = None,
                     vmem_limit_bytes: int = 12 * 2**20):
@@ -66,10 +69,23 @@ def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array, *,
     a_bytes = K * K * log_A.dtype.itemsize
     work = a_bytes + 3 * bt * K * 4 + K * K * 4  # A + streams + scores intermediate
     if K % 128 != 0 or work > vmem_limit_bytes:
-        return _ref.viterbi_forward_ref(log_A, em, delta0)  # XLA path
+        return _ref_fwd_jit(log_A, em, delta0)  # XLA path, retrace-cached
     while T % bt:  # largest block size that tiles T exactly (keeps kernel exact)
         bt //= 2
     return _vit_fwd_pallas(log_A, em, delta0, bt=bt, interpret=interpret)
+
+
+def viterbi_chunk_step(log_A: jax.Array, em_chunk: jax.Array, delta: jax.Array,
+                       *, bt: int = 8, interpret: bool | None = None):
+    """One streaming DP advance: carry delta through a (C, K) emission chunk.
+
+    The online decoders feed arbitrary-length chunks; each chunk runs the same
+    fused Pallas forward kernel as the offline path (log_A resident in VMEM,
+    emissions streamed) instead of a per-timestep Python loop.
+
+    Returns (psi (C, K) int32, delta' (K,)).
+    """
+    return viterbi_forward(log_A, em_chunk, delta, bt=bt, interpret=interpret)
 
 
 def viterbi_decode_fused(log_pi: jax.Array, log_A: jax.Array, em: jax.Array,
@@ -102,5 +118,5 @@ def beam_step(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
                              interpret=interpret)
 
 
-__all__ = ["tropical_matmul", "viterbi_forward", "viterbi_decode_fused",
-           "beam_step"]
+__all__ = ["tropical_matmul", "viterbi_forward", "viterbi_chunk_step",
+           "viterbi_decode_fused", "beam_step"]

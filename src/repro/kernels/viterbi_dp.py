@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax<0.5 exposes this dataclass as TPUCompilerParams
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 
 def _viterbi_fwd_kernel(a_ref, em_ref, d0_ref, psi_ref, dT_ref, dscr, *,
                         bt: int, nsteps: int):
@@ -85,7 +88,7 @@ def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array, *,
             jax.ShapeDtypeStruct((K,), em.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((1, K), em.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(log_A, em, delta0)

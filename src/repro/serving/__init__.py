@@ -1,1 +1,7 @@
-"""repro.serving"""
+"""repro.serving — batch (scheduler/alignment) and streaming (stream) decode."""
+
+from .scheduler import Request, BatchScheduler
+from .stream import StreamConfig, StreamSession, StreamMux
+
+__all__ = ["Request", "BatchScheduler",
+           "StreamConfig", "StreamSession", "StreamMux"]

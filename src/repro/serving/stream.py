@@ -1,0 +1,168 @@
+"""Streaming decode sessions: the serving face of the online Viterbi subsystem.
+
+``StreamSession`` wraps one live decode — frames go in, committed path
+prefixes come out as soon as they are final — and ``StreamMux`` multiplexes
+many concurrent sessions the way ``BatchScheduler`` multiplexes offline
+requests: sessions are grouped by their *block size* (the bucket), frames are
+buffered per session, and the DP only ever advances in whole blocks, so the
+jitted chunk kernel sees one shape per bucket instead of one per ragged
+arrival.  Leftover frames shorter than a block run once, at ``finish()``.
+
+    mux = StreamMux(hmm.log_pi, hmm.log_A, cfg=StreamConfig(max_lag=64))
+    sid = mux.open(block=128)
+    out = mux.feed(sid, frames)          # {"committed": (n,) int32, ...}
+    path, score = mux.finish(sid)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import numpy as np
+
+from repro.core.online import OnlineBeamDecoder, OnlineViterbiDecoder
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamConfig:
+    """Per-deployment resource profile for streaming decode.
+
+    method "online" is exact (O(W*K) live state, W the convergence window);
+    "online_beam" caps live state at O(W*B) independent of K.  ``max_lag``
+    bounds commit latency (and W) at the cost of exactness on forced steps.
+    """
+    method: str = "online"            # online | online_beam
+    beam_width: int = 128
+    kchunk: int = 128                 # K-chunking of the beam transition
+    max_lag: int | None = None
+
+
+def _make_decoder(log_pi, log_A, cfg: StreamConfig):
+    if cfg.method == "online":
+        return OnlineViterbiDecoder(log_pi, log_A, max_lag=cfg.max_lag)
+    if cfg.method == "online_beam":
+        return OnlineBeamDecoder(log_pi, log_A, beam_width=cfg.beam_width,
+                                 kchunk=cfg.kchunk, max_lag=cfg.max_lag)
+    raise ValueError(f"unknown stream method {cfg.method!r}")
+
+
+class StreamSession:
+    """One live decode: ``feed(chunk) -> committed_prefix``.
+
+    Frames are buffered and the DP advances in fixed ``block``-sized chunks
+    (one jit shape per block size); anything still buffered is drained by
+    ``finish()``.
+    """
+
+    def __init__(self, log_pi, log_A, cfg: StreamConfig = StreamConfig(),
+                 *, block: int = 128, sid: int = 0):
+        self.sid = sid
+        self.block = int(block)
+        self.cfg = cfg
+        self.decoder = _make_decoder(log_pi, log_A, cfg)
+        self._buf: list[np.ndarray] = []
+        self._buffered = 0
+        self.opened = time.monotonic()
+        self.first_commit_s: float | None = None
+        self.frames_in = 0
+
+    def feed(self, frames) -> np.ndarray:
+        """Buffer (C, K) frames; run whole blocks; return newly-final states."""
+        frames = np.asarray(frames, dtype=np.float32)
+        if frames.ndim != 2:
+            raise ValueError(f"expected (C, K) frames, got {frames.shape}")
+        self.frames_in += frames.shape[0]
+        self._buf.append(frames)
+        self._buffered += frames.shape[0]
+        out: list[np.ndarray] = []
+        if self._buffered >= self.block:
+            pending = np.concatenate(self._buf, axis=0)
+            n_blocks = pending.shape[0] // self.block
+            for i in range(n_blocks):
+                out.append(self.decoder.feed(
+                    pending[i * self.block:(i + 1) * self.block]))
+            rest = pending[n_blocks * self.block:]
+            self._buf = [rest] if rest.shape[0] else []
+            self._buffered = rest.shape[0]
+        committed = (np.concatenate(out) if out
+                     else np.zeros((0,), np.int32))
+        if committed.shape[0] and self.first_commit_s is None:
+            self.first_commit_s = time.monotonic() - self.opened
+        return committed
+
+    def finish(self) -> tuple[np.ndarray, float]:
+        """Drain the buffer, flush the decoder; returns (full path, score)."""
+        if self._buffered:
+            self.decoder.feed(np.concatenate(self._buf, axis=0))
+            self._buf, self._buffered = [], 0
+        self.decoder.flush()
+        return self.decoder.path, self.decoder.score
+
+    @property
+    def lag(self) -> int:
+        return self.decoder.lag + self._buffered
+
+    def live_state_bytes(self) -> int:
+        return self.decoder.live_state_bytes()
+
+
+class StreamMux:
+    """Many concurrent ``StreamSession``s over one shared model.
+
+    The ``BatchScheduler`` idea applied to streams: sessions are bucketed by
+    block size so every session in a bucket drives the *same* compiled chunk
+    step, and per-bucket round-robin keeps the jit cache and the device warm
+    under mixed traffic.  (State stays per-session — streaming DP carries are
+    stateful — so the win is shape bucketing, not cross-session batching.)
+    """
+
+    def __init__(self, log_pi, log_A, cfg: StreamConfig = StreamConfig(),
+                 blocks: tuple[int, ...] = (32, 128, 512)):
+        self.log_pi = log_pi
+        self.log_A = log_A
+        self.cfg = cfg
+        self.blocks = tuple(sorted(blocks))
+        self._sessions: dict[int, StreamSession] = {}
+        self._ids = itertools.count()
+        self.stats = {"opened": 0, "finished": 0, "frames": 0, "commits": 0}
+
+    def _bucket(self, block: int) -> int:
+        for b in self.blocks:
+            if block <= b:
+                return b
+        return self.blocks[-1]
+
+    def open(self, block: int = 128) -> int:
+        sid = next(self._ids)
+        self._sessions[sid] = StreamSession(
+            self.log_pi, self.log_A, self.cfg,
+            block=self._bucket(block), sid=sid)
+        self.stats["opened"] += 1
+        return sid
+
+    def feed(self, sid: int, frames) -> dict:
+        sess = self._sessions[sid]
+        committed = sess.feed(frames)
+        self.stats["frames"] += int(np.asarray(frames).shape[0])
+        self.stats["commits"] += int(committed.shape[0])
+        return {"committed": committed, "lag": sess.lag,
+                "n_committed": sess.decoder.n_committed}
+
+    def finish(self, sid: int) -> tuple[np.ndarray, float]:
+        sess = self._sessions.pop(sid)
+        self.stats["finished"] += 1
+        return sess.finish()
+
+    def sessions_by_bucket(self) -> dict[int, list[int]]:
+        out: dict[int, list[int]] = {b: [] for b in self.blocks}
+        for sid, s in self._sessions.items():
+            out[s.block].append(sid)
+        return out
+
+    def live_state_bytes(self) -> int:
+        return sum(s.live_state_bytes() for s in self._sessions.values())
+
+
+__all__ = ["StreamConfig", "StreamSession", "StreamMux"]

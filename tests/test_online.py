@@ -1,0 +1,189 @@
+"""Streaming (online) Viterbi: offline equivalence, monotone commits,
+bounded lag, and the serving session/mux wrappers.
+
+The load-bearing invariant: chunk-fed decoding with convergence-point commits
+must reproduce the offline decode *bit-identically* for the exact variant, for
+any chunking of the same emissions; commits must always be prefixes of the
+final path."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import (erdos_renyi_hmm, left_to_right_hmm, random_emissions,
+                        path_score, viterbi_vanilla, viterbi_decode,
+                        OnlineViterbiDecoder, OnlineBeamDecoder,
+                        viterbi_online, viterbi_online_beam)
+from repro.serving import StreamConfig, StreamSession, StreamMux
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.key(42)
+    k1, k2 = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, 32, edge_prob=0.3)
+    em = random_emissions(k2, 97, 32)   # deliberately not a chunk multiple
+    path, score = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    return hmm, em, np.asarray(path), float(score)
+
+
+# -- exact variant ----------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_size", [1, 5, 16, 64])
+def test_online_exact_bit_identical(problem, chunk_size):
+    hmm, em, ref_path, ref_score = problem
+    path, score = viterbi_online(hmm.log_pi, hmm.log_A, em,
+                                 chunk_size=chunk_size)
+    assert np.array_equal(np.asarray(path), ref_path)
+    assert float(score) == ref_score
+
+
+def test_online_commits_are_monotone_prefixes(problem):
+    hmm, em, ref_path, _ = problem
+    dec = OnlineViterbiDecoder(hmm.log_pi, hmm.log_A)
+    prev = 0
+    for s in range(0, em.shape[0], 7):
+        got = dec.feed(em[s:s + 7])
+        assert got.shape[0] == dec.n_committed - prev
+        prev = dec.n_committed
+        # every commit so far is a prefix of the final (offline) path
+        assert np.array_equal(dec.path, ref_path[:dec.n_committed])
+    tail, score = dec.flush()
+    assert np.array_equal(dec.path, ref_path)
+    assert dec.n_committed == em.shape[0]
+
+
+def test_online_converges_before_flush(problem):
+    """The window must actually commit mid-stream, not just at flush."""
+    hmm, em, *_ = problem
+    dec = OnlineViterbiDecoder(hmm.log_pi, hmm.log_A)
+    for s in range(0, em.shape[0], 16):
+        dec.feed(em[s:s + 16])
+    assert dec.n_committed > em.shape[0] // 2
+    assert dec.stats["commits"] > 1
+
+
+def test_online_bounded_lag():
+    """max_lag forces commits; path stays complete and states valid."""
+    k1, k2 = jax.random.split(jax.random.key(3))
+    hmm = erdos_renyi_hmm(k1, 24, edge_prob=0.3)
+    em = random_emissions(k2, 80, 24, scale=0.3)  # weak evidence: slow converge
+    _, opt = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    dec = OnlineViterbiDecoder(hmm.log_pi, hmm.log_A, max_lag=4)
+    for s in range(0, 80, 8):
+        dec.feed(em[s:s + 8])
+        assert dec.lag <= 4
+    dec.flush()
+    p = dec.path
+    assert p.shape == (80,)
+    assert ((0 <= p) & (p < 24)).all()
+    # forced-flush path is approximate: never better than optimal
+    ps = path_score(hmm.log_pi, hmm.log_A, em, p)
+    assert float(ps) <= float(opt) + 1e-4
+
+
+def test_online_single_step_and_empty():
+    k1, k2 = jax.random.split(jax.random.key(9))
+    hmm = erdos_renyi_hmm(k1, 8, edge_prob=0.7)
+    em = random_emissions(k2, 1, 8)
+    dec = OnlineViterbiDecoder(hmm.log_pi, hmm.log_A)
+    assert dec.feed(em[:0]).shape == (0,)
+    dec.feed(em)
+    tail, score = dec.flush()
+    ref_path, ref_score = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    assert np.array_equal(dec.path, np.asarray(ref_path))
+    assert float(score) == float(ref_score)
+    with pytest.raises(RuntimeError):
+        dec.feed(em)
+
+
+# -- beam variant -----------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_size", [5, 16, 64])
+def test_online_beam_full_width_matches_offline(problem, chunk_size):
+    hmm, em, ref_path, ref_score = problem
+    K = em.shape[1]
+    path, score = viterbi_online_beam(hmm.log_pi, hmm.log_A, em, beam_width=K,
+                                      chunk_size=chunk_size, kchunk=8)
+    assert np.array_equal(np.asarray(path), ref_path)
+    assert np.allclose(float(score), ref_score, rtol=1e-5)
+
+
+def test_online_beam_narrow_monotone_and_bounded(problem):
+    hmm, em, _, ref_score = problem
+    dec = OnlineBeamDecoder(hmm.log_pi, hmm.log_A, beam_width=8, kchunk=8)
+    prefixes = []
+    for s in range(0, em.shape[0], 11):
+        dec.feed(em[s:s + 11])
+        prefixes.append(dec.path.copy())
+    dec.flush()
+    final = dec.path
+    assert final.shape == (em.shape[0],)
+    assert all(np.array_equal(p, final[:len(p)]) for p in prefixes)
+    ps = path_score(hmm.log_pi, hmm.log_A, em, final)
+    assert float(ps) <= ref_score + 1e-4     # beam never beats optimal
+
+
+def test_online_beam_live_state_decoupled_from_K(problem):
+    hmm, em, *_ = problem
+    dec = OnlineBeamDecoder(hmm.log_pi, hmm.log_A, beam_width=8, kchunk=8)
+    dec.feed(em[:32])
+    K = em.shape[1]
+    assert dec.live_state_bytes() < 32 * K * 4   # strictly below O(W * K)
+
+
+# -- api dispatch -----------------------------------------------------------
+
+def test_api_dispatch_online(problem):
+    hmm, em, ref_path, ref_score = problem
+    path, score = viterbi_decode(em, hmm.log_pi, hmm.log_A, method="online",
+                                 stream_chunk=32)
+    assert np.array_equal(np.asarray(path), ref_path)
+    path, score = viterbi_decode(em, hmm.log_pi, hmm.log_A,
+                                 method="online_beam", beam_width=em.shape[1],
+                                 chunk=8, stream_chunk=32)
+    assert np.allclose(float(score), ref_score, rtol=1e-5)
+
+
+# -- serving layer ----------------------------------------------------------
+
+def test_stream_session_ragged_feeds(problem):
+    hmm, em, ref_path, ref_score = problem
+    sess = StreamSession(hmm.log_pi, hmm.log_A, StreamConfig(), block=16)
+    i = 0
+    for n in (3, 20, 1, 40, 33):
+        sess.feed(np.asarray(em[i:i + n]))
+        i += n
+    path, score = sess.finish()
+    assert np.array_equal(path, ref_path)
+    assert float(score) == ref_score
+
+
+def test_stream_mux_concurrent_sessions(problem):
+    hmm, em, ref_path, _ = problem
+    mux = StreamMux(hmm.log_pi, hmm.log_A, blocks=(16, 64))
+    a, b = mux.open(block=16), mux.open(block=50)
+    assert mux.sessions_by_bucket()[16] == [a]
+    assert mux.sessions_by_bucket()[64] == [b]
+    for s in range(0, em.shape[0], 25):
+        chunk = np.asarray(em[s:s + 25])
+        out = mux.feed(a, chunk)
+        assert out["n_committed"] >= out["committed"].shape[0]
+        mux.feed(b, chunk)
+    pa, _ = mux.finish(a)
+    pb, _ = mux.finish(b)
+    assert np.array_equal(pa, ref_path)
+    assert np.array_equal(pb, ref_path)
+    assert mux.stats["finished"] == 2
+
+
+def test_stream_left_to_right_alignment_online():
+    """Streaming decode of a Bakis model keeps the alignment constraints."""
+    k1, k2 = jax.random.split(jax.random.key(7))
+    hmm = left_to_right_hmm(k1, 32, 16)
+    em = random_emissions(k2, 64, 32)
+    path, _ = viterbi_online(hmm.log_pi, hmm.log_A, em, chunk_size=10)
+    path = np.asarray(path)
+    assert path[0] == 0
+    assert np.all(np.diff(path) >= 0)
+    assert np.all(np.diff(path) <= 2)

@@ -7,6 +7,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import (erdos_renyi_hmm, random_emissions, flash_viterbi,
