@@ -3,20 +3,28 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench example-quickstart example-streaming
+.PHONY: test test-fast bench bench-smoke example-quickstart example-streaming \
+	example-batch
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
 
 test-fast:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q \
-	    tests/test_core_viterbi.py tests/test_kernels.py tests/test_online.py
+	    tests/test_core_viterbi.py tests/test_kernels.py tests/test_batch.py \
+	    tests/test_online.py
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run
+
+bench-smoke:  # ~30 s benchmark smoke used by CI (kernel model + batched decode)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run --quick
 
 example-quickstart:
 	$(PY) examples/quickstart.py
 
 example-streaming:
 	$(PY) examples/streaming_decode.py
+
+example-batch:
+	$(PY) examples/batch_decode.py

@@ -1,0 +1,70 @@
+"""Fig. 12 (beyond-paper): batched decode throughput — one batch-grid fused
+kernel launch vs a per-sequence decode loop.
+
+The serving scheduler's whole reason to batch is that one launch amortises
+dispatch overhead and the transition-matrix load across the bucket (the GPU
+Viterbi literature's batch-axis parallelism).  This benchmark measures exactly
+that trade on this host: `viterbi_decode_batch(method="fused")` (grid (B, T/bt),
+log_A resident) against a Python loop of jitted single-sequence
+`viterbi_decode_fused` calls over the same emissions.  Off-TPU the kernel runs
+in interpret mode, so absolute numbers are conservative; the dispatch-
+amortisation effect is what the speedup column tracks.  Results are also
+written to ``benchmarks/out/fig12_batch.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from repro.core import erdos_renyi_hmm, random_emissions
+from repro.core.batch import viterbi_decode_batch
+from repro.kernels.ops import viterbi_decode_fused
+from .common import emit, timeit
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "out", "fig12_batch.json")
+
+
+def run(full: bool = False):
+    K = 128
+    T = 512 if full else 32
+    batch_sizes = (1, 8, 16, 32) if full else (1, 8, 16)
+    key = jax.random.key(12)
+    k1, k2 = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, K, edge_prob=0.3)
+    em_all = random_emissions(k2, max(batch_sizes) * T, K).reshape(
+        max(batch_sizes), T, K)
+
+    batched = jax.jit(lambda e: viterbi_decode_batch(
+        e, hmm.log_pi, hmm.log_A, method="fused"))
+    per_seq = jax.jit(lambda e: viterbi_decode_fused(
+        hmm.log_pi, hmm.log_A, e))
+
+    rows = []
+    for B in batch_sizes:
+        em = em_all[:B]
+
+        def loop_fn(ems):
+            return [per_seq(ems[i]) for i in range(B)]
+
+        t_batch = timeit(batched, em, repeats=5)
+        t_loop = timeit(loop_fn, em, repeats=5)
+        speedup = t_loop / t_batch
+        emit(f"fig12/fused_batch_B{B}", t_batch,
+             f"loop_us={t_loop * 1e6:.1f};speedup={speedup:.2f}x")
+        rows.append(dict(B=B, T=T, K=K, batch_s=t_batch, loop_s=t_loop,
+                         speedup=speedup))
+
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(dict(backend=jax.default_backend(),
+                       interpret=jax.default_backend() != "tpu",
+                       rows=rows), f, indent=2)
+    emit("fig12/json_written", 0.0, OUT_JSON)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -1,24 +1,28 @@
 """Benchmark runner. Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only table1,fig9]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--quick] [--only table1,fig9]
 
-Quick mode (default) uses reduced sizes so the whole suite finishes on one
-CPU core; --full matches the paper's settings (K=3965 alignment, sweeps to
-2048)."""
+Default mode uses reduced sizes so the whole suite finishes on one CPU core;
+--full matches the paper's settings (K=3965 alignment, sweeps to 2048);
+--quick runs the ~30-second CI smoke subset (kernel model + batched decode)."""
 
 import argparse
 import sys
 import traceback
 
+QUICK_SUITES = ["fig10", "fig12"]
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke subset (~30 s)")
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
     from . import (table1_overall, fig7_scaling, fig8_density, fig9_beam,
-                   fig10_kernel, fig11_streaming, roofline_table)
+                   fig10_kernel, fig11_streaming, fig12_batch, roofline_table)
     suites = {
         "table1": table1_overall.run,
         "fig7": fig7_scaling.run,
@@ -26,9 +30,15 @@ def main() -> None:
         "fig9": fig9_beam.run,
         "fig10": fig10_kernel.run,
         "fig11": fig11_streaming.run,
+        "fig12": fig12_batch.run,
         "roofline": roofline_table.run,
     }
-    picked = args.only.split(",") if args.only else list(suites)
+    if args.only:
+        picked = args.only.split(",")
+    elif args.quick:
+        picked = QUICK_SUITES
+    else:
+        picked = list(suites)
     print("name,us_per_call,derived")
     failed = []
     for name in picked:

@@ -1,0 +1,88 @@
+"""Batched decoding: one launch for a whole ragged request bucket.
+
+    PYTHONPATH=src python examples/batch_decode.py
+
+Builds a shared HMM, a batch of emission sequences with *different* true
+lengths, and decodes them three ways:
+
+  1. `viterbi_decode_batch(method="fused")` — one batch-grid kernel launch,
+     pad frames masked as tropical-identity steps;
+  2. a Python loop of single-sequence `viterbi_decode` calls (the semantics
+     the batch must reproduce bit-for-bit);
+  3. through the serving `BatchScheduler`, which buckets, pads, and passes
+     `lengths` so results stay exact.
+"""
+
+import sys
+import os
+_here = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(_here, "..", "src"))
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import (erdos_renyi_hmm, random_emissions, viterbi_decode,
+                        viterbi_decode_batch)
+from repro.serving.alignment import AlignmentConfig, make_alignment_head
+from repro.serving.scheduler import BatchScheduler
+
+K, TMAX, B = 128, 96, 8
+
+key = jax.random.key(0)
+k_hmm, k_em = jax.random.split(key)
+hmm = erdos_renyi_hmm(k_hmm, K, edge_prob=0.3)
+em = random_emissions(k_em, B * TMAX, K).reshape(B, TMAX, K)
+rng = np.random.default_rng(0)
+lengths = np.sort(rng.integers(1, TMAX + 1, B))[::-1].copy()
+lengths[0] = TMAX
+print(f"batch of {B} sequences, K={K}, ragged lengths={lengths.tolist()}\n")
+
+# 1. one batched launch (ragged lengths masked as tropical-identity steps)
+paths, scores = viterbi_decode_batch(em, hmm.log_pi, hmm.log_A,
+                                     jnp.asarray(lengths), method="fused")
+jax.block_until_ready(paths)
+t0 = time.perf_counter()
+paths, scores = viterbi_decode_batch(em, hmm.log_pi, hmm.log_A,
+                                     jnp.asarray(lengths), method="fused")
+jax.block_until_ready(paths)
+t_batch = time.perf_counter() - t0
+
+# 2. the per-sequence loop it must reproduce bit-for-bit (warmed first, so
+# the timing compares dispatch + compute, not per-length jit compiles)
+def run_loop():
+    return [viterbi_decode(em[i, :int(L)], hmm.log_pi, hmm.log_A,
+                           method="fused") for i, L in enumerate(lengths)]
+
+looped = run_loop()
+jax.block_until_ready(looped)
+t0 = time.perf_counter()
+looped = run_loop()
+jax.block_until_ready(looped)
+t_loop = time.perf_counter() - t0
+
+ok = all(
+    np.array_equal(np.asarray(paths[i, :int(L)]), np.asarray(looped[i][0]))
+    and np.isclose(float(scores[i]), float(looped[i][1]), rtol=1e-6)
+    for i, L in enumerate(lengths))
+print(f"batched == looped per sequence: {ok}")
+print(f"batched launch: {t_batch * 1e3:.2f} ms   "
+      f"loop of {B}: {t_loop * 1e3:.2f} ms "
+      f"(both warmed; the loop also pays one jit compile per distinct length "
+      f"on first contact, which buckets avoid entirely)\n")
+
+# 3. the serving path: scheduler buckets + pads, decoder masks the pads
+head = make_alignment_head(hmm.log_pi, hmm.log_A, AlignmentConfig(method="fused"))
+sched = BatchScheduler(head, max_batch=B, buckets=(TMAX,))
+reqs = [sched.submit(np.asarray(em[i, :int(L)])) for i, L in enumerate(lengths)]
+done = sched.drain()
+ok = all(
+    np.array_equal(r.result[0], np.asarray(paths[i, :int(lengths[i])]))
+    and np.isclose(r.result[1], float(scores[i]), rtol=1e-6)
+    for i, r in enumerate(done))
+print(f"scheduler results == batched decode: {ok}")
+print(f"scheduler stats: {sched.stats['batches']} batch(es), "
+      f"mean pad frac {np.mean(sched.stats['padded_frac']):.2f} "
+      f"-- padding costs throughput only, never correctness")

@@ -32,22 +32,25 @@ NUM_CLASSES = cfg.vocab
 # 2. alignment HMM over the transcription states (left-to-right)
 hmm = left_to_right_hmm(jax.random.key(1), 64, NUM_CLASSES)
 
-# 3. one jitted serve step: encoder -> emissions -> FLASH-BS alignment
-from repro.core import flash_bs_viterbi
+# 3. one jitted serve step: encoder -> emissions -> FLASH-BS alignment.
+# `lengths` masks the bucket's pad frames as tropical-identity steps, so each
+# request decodes exactly as if it had been served alone.
+from repro.core import viterbi_decode_batch
 
 @jax.jit
-def serve(frames):                       # (B, T, d)
+def serve(frames, lengths):              # (B, T, d), (B,)
     logits, _ = model.prefill(params, {"embeds": frames})
     em = jax.nn.log_softmax(logits, axis=-1)
     # map class posteriors onto HMM states (states index classes mod C)
     state_to_class = jnp.arange(64) % NUM_CLASSES
     em_states = em[..., state_to_class]  # (B, T, K_states)
-    return jax.vmap(lambda e: flash_bs_viterbi(
-        hmm.log_pi, hmm.log_A, e, beam_width=32, parallelism=4,
-        lanes=None))(em_states)
+    return viterbi_decode_batch(em_states, hmm.log_pi, hmm.log_A, lengths,
+                                method="flash_bs", beam_width=32,
+                                parallelism=4, lanes=None)
 
-sched = BatchScheduler(lambda b: serve(jnp.asarray(b, cfg.dtype)),
-                       max_batch=4, buckets=(64,))
+sched = BatchScheduler(
+    lambda b, lens: serve(jnp.asarray(b, cfg.dtype), jnp.asarray(lens)),
+    max_batch=4, buckets=(64,))
 
 rng = np.random.default_rng(0)
 for _ in range(12):

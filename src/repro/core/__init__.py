@@ -3,7 +3,8 @@
 from .hmm import (HMM, NEG_INF, erdos_renyi_hmm, left_to_right_hmm,
                   sample_observations, path_score, relative_error,
                   random_emissions)
-from .vanilla import viterbi_vanilla, viterbi_vanilla_batched
+from .vanilla import (viterbi_vanilla, viterbi_vanilla_masked,
+                      viterbi_vanilla_batched)
 from .checkpoint_viterbi import viterbi_checkpoint
 from .flash import flash_viterbi, plan_padding, pad_emissions, chunked_vmap
 from .flash_bs import flash_bs_viterbi
@@ -11,15 +12,18 @@ from .beam_static import beam_static_viterbi, beam_static_mp_viterbi
 from .assoc import viterbi_assoc
 from .online import (OnlineViterbiDecoder, OnlineBeamDecoder,
                      viterbi_online, viterbi_online_beam)
-from .api import viterbi_decode, viterbi_decode_hmm, METHODS
+from .api import (viterbi_decode, viterbi_decode_hmm, viterbi_decode_batch,
+                  METHODS, BATCH_METHODS)
 
 __all__ = [
     "HMM", "NEG_INF", "erdos_renyi_hmm", "left_to_right_hmm",
     "sample_observations", "path_score", "relative_error", "random_emissions",
-    "viterbi_vanilla", "viterbi_vanilla_batched", "viterbi_checkpoint",
+    "viterbi_vanilla", "viterbi_vanilla_masked", "viterbi_vanilla_batched",
+    "viterbi_checkpoint",
     "flash_viterbi", "plan_padding", "pad_emissions", "chunked_vmap",
     "flash_bs_viterbi", "beam_static_viterbi", "beam_static_mp_viterbi",
     "viterbi_assoc", "OnlineViterbiDecoder", "OnlineBeamDecoder",
     "viterbi_online", "viterbi_online_beam",
-    "viterbi_decode", "viterbi_decode_hmm", "METHODS",
+    "viterbi_decode", "viterbi_decode_hmm", "viterbi_decode_batch",
+    "METHODS", "BATCH_METHODS",
 ]

@@ -5,11 +5,16 @@ and benchmarks.
 
 `method` selects among the paper's algorithm ("flash", "flash_bs"), the paper's
 baselines ("vanilla", "checkpoint", "beam_static", "beam_static_mp"), the
-beyond-paper associative-scan schedule ("assoc") and the streaming decoders
-("online", "online_beam" — chunk-fed one-shot; for true incremental use, hold
-an `OnlineViterbiDecoder` / `serving.stream.StreamSession` directly).  Tunables
-`parallelism`, `lanes`, `beam_width` and `chunk` realise the paper's adaptivity
-story: one operator, resource profile chosen per deployment.
+beyond-paper associative-scan schedule ("assoc"), the fused Pallas forward
+kernel ("fused"), and the streaming decoders ("online", "online_beam" —
+chunk-fed one-shot; for true incremental use, hold an `OnlineViterbiDecoder` /
+`serving.stream.StreamSession` directly).  Tunables `parallelism`, `lanes`,
+`beam_width` and `chunk` realise the paper's adaptivity story: one operator,
+resource profile chosen per deployment.
+
+Batches go through `viterbi_decode_batch(emissions (B, T, K), log_pi, log_A,
+lengths)` — ragged lengths decode exactly via tropical-identity pad steps; see
+`core/batch.py`.
 """
 
 from __future__ import annotations
@@ -27,9 +32,10 @@ from .flash_bs import flash_bs_viterbi
 from .beam_static import beam_static_viterbi, beam_static_mp_viterbi
 from .assoc import viterbi_assoc
 from .online import viterbi_online, viterbi_online_beam
+from .batch import viterbi_decode_batch, BATCH_METHODS
 
 METHODS = ("vanilla", "checkpoint", "flash", "flash_bs",
-           "beam_static", "beam_static_mp", "assoc",
+           "beam_static", "beam_static_mp", "assoc", "fused",
            "online", "online_beam")
 
 
@@ -70,6 +76,9 @@ def viterbi_decode(
                                       parallelism=parallelism, lanes=lanes)
     if method == "assoc":
         return viterbi_assoc(log_pi, log_A, emissions)
+    if method == "fused":
+        from repro.kernels.ops import viterbi_decode_fused
+        return viterbi_decode_fused(log_pi, log_A, emissions)
     if method == "online":
         return viterbi_online(log_pi, log_A, emissions,
                               chunk_size=stream_chunk, max_lag=max_lag)
@@ -87,4 +96,5 @@ def viterbi_decode_hmm(obs: jax.Array, hmm: HMM, method: str = "flash",
                           method=method, **kwargs)
 
 
-__all__ = ["viterbi_decode", "viterbi_decode_hmm", "METHODS"]
+__all__ = ["viterbi_decode", "viterbi_decode_hmm", "viterbi_decode_batch",
+           "METHODS", "BATCH_METHODS"]

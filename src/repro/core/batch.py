@@ -1,0 +1,137 @@
+"""First-class batched decoding — `viterbi_decode_batch` over (B, T, K).
+
+Batch-axis parallelism is where decoding throughput comes from on wide
+hardware (cf. the GPU Viterbi literature): one launch amortises the
+transition-matrix load and the dispatch overhead over the whole request
+bucket.  This module is the single entry point serving goes through.
+
+Ragged batches are the normal case in serving, so `lengths` is part of the
+contract rather than an afterthought: sequence i is decoded *exactly* at
+length `lengths[i]`, with the tail realised as tropical-identity pad steps
+(stay in place, add 0 — the masking machinery shared with `flash.pad_emissions`
+/ `flash._dp_step`, which provably leaves deltas, backpointers, and scores
+unchanged).  Scores therefore contain no pad-transition mass and per-sequence
+results are bit-identical to looped `viterbi_decode` calls for the exact
+methods; `tests/test_batch.py` pins this.
+
+Methods:
+  * ``fused``    — batch-grid Pallas kernel (`kernels.ops.viterbi_decode_fused_batch`):
+                   grid (B, T/bt), log_A resident in VMEM for the whole bucket.
+  * ``vanilla``  — vmapped masked lax.scan (exact oracle).
+  * ``flash``    — vmapped FLASH wavefront; ragged masks ride the same pad
+                   machinery the algorithm already uses for its P·2^L padding.
+  * ``flash_bs`` — vmapped FLASH-BS dynamic beam (exact when beam_width >= K).
+
+Path entries at padded steps repeat the sequence's final decoded state
+(identity backpointers); slice row i to [:lengths[i]] for the true path.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .vanilla import viterbi_vanilla_masked
+from .flash import plan_padding, _flash_padded
+from .flash_bs import pad_state_space, _flash_bs_padded
+
+BATCH_METHODS = ("vanilla", "flash", "flash_bs", "fused")
+
+
+def _pad_mask(T: int, lengths: jax.Array) -> jax.Array:
+    return jnp.arange(T)[None, :] >= lengths[:, None]    # (B, T) True == pad
+
+
+def _vanilla_batch(log_pi, log_A, em, pad):
+    return jax.vmap(
+        lambda e, p: viterbi_vanilla_masked(log_pi, log_A, e, p))(em, pad)
+
+
+def _flash_batch(log_pi, log_A, em, pad, P: int, lanes):
+    B, T, K = em.shape
+    Tp, _ = plan_padding(T, P)
+    em_p = jnp.pad(em, ((0, 0), (0, Tp - T), (0, 0)))
+    pad_p = jnp.pad(pad, ((0, 0), (0, Tp - T)), constant_values=True)
+    q, s = jax.vmap(
+        lambda e, p: _flash_padded(log_pi, log_A, e, p, P, lanes))(em_p, pad_p)
+    return q[:, :T], s
+
+
+def _flash_bs_batch(log_pi, log_A, em, pad, beam_width: int, P: int, lanes,
+                    chunk: int):
+    B, T, K = em.shape
+    Bw = int(min(beam_width, K))
+    chunk = int(min(chunk, K))
+    log_pi, log_A, em, _ = pad_state_space(log_pi, log_A, em, chunk)
+    Tp, _ = plan_padding(T, P)
+    em_p = jnp.pad(em, ((0, 0), (0, Tp - T), (0, 0)))
+    pad_p = jnp.pad(pad, ((0, 0), (0, Tp - T)), constant_values=True)
+    q, s = jax.vmap(
+        lambda e, p: _flash_bs_padded(log_pi, log_A, e, p, P, lanes, Bw,
+                                      chunk))(em_p, pad_p)
+    return q[:, :T], s
+
+
+def viterbi_decode_batch(
+    emissions: jax.Array,
+    log_pi: jax.Array,
+    log_A: jax.Array,
+    lengths: jax.Array | None = None,
+    method: str = "fused",
+    *,
+    parallelism: int = 8,
+    lanes: int | None = -1,
+    beam_width: int = 128,
+    chunk: int = 128,
+    bt: int = 8,
+) -> tuple[jax.Array, jax.Array]:
+    """Decode a (possibly ragged) batch of emission sequences.
+
+    Args:
+      emissions: (B, T, K) emission log-likelihoods, row i real for the first
+        lengths[i] steps (pad frames may hold anything — they are masked).
+      log_pi, log_A: shared HMM in log domain.
+      lengths: optional (B,) int true lengths in [1, T]; None means every
+        sequence is full-length.
+      method: one of ``BATCH_METHODS``.  ``vanilla``/``fused`` are exact;
+        ``flash`` is exact; ``flash_bs`` is exact when beam_width >= K.
+      parallelism, lanes, beam_width, chunk: as in `viterbi_decode`.
+      bt: fused-kernel time-block size.
+
+    Returns:
+      (paths (B, T) int32, scores (B,)): paths[i, :lengths[i]] is the decode
+      of emissions[i, :lengths[i]] (bit-identical to the unbatched call for
+      exact methods); entries past the length repeat the final decoded state.
+    """
+    if method not in BATCH_METHODS:
+        raise ValueError(
+            f"unknown batch method {method!r}; choose from {BATCH_METHODS}")
+    B, T, K = emissions.shape
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    lengths = jnp.clip(jnp.asarray(lengths, jnp.int32), 1, T)
+
+    if T == 1:
+        d0 = log_pi[None, :] + emissions[:, 0, :]
+        q = jnp.argmax(d0, axis=1).astype(jnp.int32)
+        return q[:, None], jnp.max(d0, axis=1)
+
+    if method == "fused":
+        from repro.kernels.ops import viterbi_decode_fused_batch
+        return viterbi_decode_fused_batch(log_pi, log_A, emissions, lengths,
+                                          bt=bt)
+
+    pad = _pad_mask(T, lengths)
+    if method == "vanilla":
+        return _vanilla_batch(log_pi, log_A, emissions, pad)
+
+    P = int(parallelism)
+    if lanes == -1:
+        lanes = P
+    if method == "flash":
+        return _flash_batch(log_pi, log_A, emissions, pad, P, lanes)
+    return _flash_bs_batch(log_pi, log_A, emissions, pad, beam_width, P,
+                           lanes, chunk)
+
+
+__all__ = ["viterbi_decode_batch", "BATCH_METHODS"]

@@ -147,11 +147,14 @@ def chunked_vmap(fn, args: tuple, lanes: int | None):
     vf = jax.vmap(fn)
     if lanes is None or n <= lanes:
         return vf(*args)
-    assert n % lanes == 0, f"layer of {n} tiles not divisible by lanes={lanes}"
-    nchunks = n // lanes
-    args_c = tuple(a.reshape(nchunks, lanes, *a.shape[1:]) for a in args)
+    nfull = (n // lanes) * lanes
+    args_c = tuple(a[:nfull].reshape(n // lanes, lanes, *a.shape[1:])
+                   for a in args)
     out = jax.lax.map(lambda xs: vf(*xs), args_c)
-    return out.reshape(n, *out.shape[2:])
+    out = out.reshape(nfull, *out.shape[2:])
+    if nfull != n:  # remainder chunk: fewer than `lanes` tasks in flight
+        out = jnp.concatenate([out, vf(*(a[nfull:] for a in args))], axis=0)
+    return out
 
 
 # ---------------------------------------------------------------------------

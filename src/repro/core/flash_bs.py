@@ -33,6 +33,25 @@ from .flash import plan_padding, chunked_vmap
 _SENTINEL = 4.0 * NEG_INF  # below any reachable (even "unreachable-edge") score
 
 
+def pad_state_space(log_pi, log_A, em, chunk: int):
+    """Pad K up to a multiple of `chunk` with sentinel states.
+
+    Fake states get sentinel emissions and sentinel in/out transitions so they
+    can never displace real candidates from the beam.  `em` may be (T, K) or
+    batched (..., T, K); the state axis is always last.  Returns
+    (log_pi, log_A, em, K_pad).
+    """
+    K = log_A.shape[0]
+    K_pad = int(math.ceil(K / chunk)) * chunk
+    if K_pad != K:
+        widths = [(0, 0)] * (em.ndim - 1) + [(0, K_pad - K)]
+        em = jnp.pad(em, widths, constant_values=_SENTINEL / 2)
+        log_A = jnp.pad(log_A, ((0, K_pad - K), (0, K_pad - K)),
+                        constant_values=_SENTINEL / 2)
+        log_pi = jnp.pad(log_pi, (0, K_pad - K), constant_values=_SENTINEL / 2)
+    return log_pi, log_A, em, K_pad
+
+
 # ---------------------------------------------------------------------------
 # Streaming top-B primitives
 # ---------------------------------------------------------------------------
@@ -227,15 +246,7 @@ def flash_bs_viterbi(log_pi, log_A, em, beam_width: int = 128,
         lanes = P
     B = int(min(beam_width, K))
     chunk = int(min(chunk, K))  # chunk == K degenerates to static beam search
-
-    # pad K to a multiple of chunk; fake states get sentinel emissions and
-    # sentinel in/out transitions so they can never displace real candidates
-    K_pad = int(math.ceil(K / chunk)) * chunk
-    if K_pad != K:
-        em = jnp.pad(em, ((0, 0), (0, K_pad - K)), constant_values=_SENTINEL / 2)
-        log_A = jnp.pad(log_A, ((0, K_pad - K), (0, K_pad - K)),
-                        constant_values=_SENTINEL / 2)
-        log_pi = jnp.pad(log_pi, (0, K_pad - K), constant_values=_SENTINEL / 2)
+    log_pi, log_A, em, _ = pad_state_space(log_pi, log_A, em, chunk)
 
     if T == 1:
         q = jnp.argmax(log_pi + em[0]).astype(jnp.int32)
@@ -248,4 +259,4 @@ def flash_bs_viterbi(log_pi, log_A, em, beam_width: int = 128,
     return q_star[:T], score
 
 
-__all__ = ["flash_bs_viterbi"]
+__all__ = ["flash_bs_viterbi", "pad_state_space"]

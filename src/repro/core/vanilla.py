@@ -47,9 +47,39 @@ def viterbi_vanilla(log_pi: jax.Array, log_A: jax.Array, em: jax.Array):
     return path, score
 
 
+@partial(jax.jit, static_argnames=())
+def viterbi_vanilla_masked(log_pi, log_A, em, pad):
+    """Exact Viterbi decode of a padded sequence.
+
+    `pad` is a (T,) bool mask; masked steps are tropical identities (delta
+    frozen, identity backpointers), so the returned score and the path prefix
+    up to the true length are bit-identical to `viterbi_vanilla` on the
+    unpadded sequence.  Path entries at padded steps repeat the final state.
+    pad[0] must be False (length >= 1).
+    """
+    # the masked forward recursion has one spec, shared with the fused
+    # kernel's fallback (lazy import: kernels sits above core in the layering)
+    from repro.kernels.ref import viterbi_forward_masked_ref
+
+    delta0 = log_pi + em[0]
+    psis, delta_T = viterbi_forward_masked_ref(log_A, em[1:], delta0, pad[1:])
+
+    q_last = jnp.argmax(delta_T).astype(jnp.int32)
+    score = delta_T[q_last]
+
+    def backward(q, psi_t):
+        q_prev = psi_t[q].astype(jnp.int32)
+        return q_prev, q_prev
+
+    _, path_prefix = jax.lax.scan(backward, q_last, psis, reverse=True)
+    path = jnp.concatenate([path_prefix, q_last[None]])
+    return path, score
+
+
 def viterbi_vanilla_batched(log_pi, log_A, em_batch):
     """vmap over a batch of emission sequences (B, T, K)."""
     return jax.vmap(lambda e: viterbi_vanilla(log_pi, log_A, e))(em_batch)
 
 
-__all__ = ["viterbi_vanilla", "viterbi_vanilla_batched"]
+__all__ = ["viterbi_vanilla", "viterbi_vanilla_masked",
+           "viterbi_vanilla_batched"]

@@ -7,7 +7,8 @@ ops.py jit'd wrappers with padding/fallbacks, ref.py pure-jnp oracles.
 from . import ops, ref
 from .tropical import tropical_matmul as tropical_matmul_pallas
 from .viterbi_dp import viterbi_forward as viterbi_forward_pallas
+from .viterbi_dp import viterbi_forward_batch as viterbi_forward_batch_pallas
 from .beam_stream import beam_step as beam_step_pallas
 
 __all__ = ["ops", "ref", "tropical_matmul_pallas", "viterbi_forward_pallas",
-           "beam_step_pallas"]
+           "viterbi_forward_batch_pallas", "beam_step_pallas"]

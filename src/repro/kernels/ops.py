@@ -17,6 +17,7 @@ import numpy as np
 from . import ref as _ref
 from .tropical import tropical_matmul as _tropical_pallas
 from .viterbi_dp import viterbi_forward as _vit_fwd_pallas
+from .viterbi_dp import viterbi_forward_batch as _vit_fwd_batch_pallas
 from .beam_stream import beam_step as _beam_step_pallas
 
 _NEG = -1.0e9
@@ -54,6 +55,14 @@ def tropical_matmul(a: jax.Array, b: jax.Array, *, interpret: bool | None = None
 
 
 _ref_fwd_jit = jax.jit(_ref.viterbi_forward_ref)
+_ref_fwd_masked_batch_jit = jax.jit(
+    jax.vmap(_ref.viterbi_forward_masked_ref, in_axes=(None, 0, 0, 0)))
+
+
+def _kernel_fits(log_A: jax.Array, K: int, bt: int, limit: int) -> bool:
+    a_bytes = K * K * log_A.dtype.itemsize
+    work = a_bytes + 3 * bt * K * 4 + K * K * 4  # A + streams + scores intermediate
+    return K % 128 == 0 and work <= limit
 
 
 def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array, *,
@@ -66,13 +75,54 @@ def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array, *,
     if interpret is None:
         interpret = not _on_tpu()
     T, K = em.shape
-    a_bytes = K * K * log_A.dtype.itemsize
-    work = a_bytes + 3 * bt * K * 4 + K * K * 4  # A + streams + scores intermediate
-    if K % 128 != 0 or work > vmem_limit_bytes:
+    if T == 0:
+        return jnp.zeros((0, K), jnp.int32), delta0
+    if not _kernel_fits(log_A, K, bt, vmem_limit_bytes):
         return _ref_fwd_jit(log_A, em, delta0)  # XLA path, retrace-cached
-    while T % bt:  # largest block size that tiles T exactly (keeps kernel exact)
-        bt //= 2
-    return _vit_fwd_pallas(log_A, em, delta0, bt=bt, interpret=interpret)
+    Tp = int(np.ceil(T / bt)) * bt
+    if Tp == T:
+        return _vit_fwd_pallas(log_A, em, delta0, bt=bt, interpret=interpret)
+    # pad T up to a bt multiple with tropical-identity steps — exact, and keeps
+    # the full block size instead of degrading the tiling on odd lengths
+    em_p = jnp.pad(em, ((0, Tp - T), (0, 0)))
+    pad = (jnp.arange(Tp) >= T).astype(em.dtype)
+    psi, delta_T = _vit_fwd_pallas(log_A, em_p, delta0, pad, bt=bt,
+                                   interpret=interpret)
+    return psi[:T], delta_T
+
+
+def viterbi_forward_batch(log_A: jax.Array, em: jax.Array, delta0: jax.Array,
+                          lengths: jax.Array | None = None, *,
+                          bt: int = 8, interpret: bool | None = None,
+                          vmem_limit_bytes: int = 12 * 2**20):
+    """Batched fused forward pass over (B, T, K) emissions with ragged lengths.
+
+    One kernel launch covers the whole batch: the grid gains a batch dimension
+    and `log_A` stays resident in VMEM across every sequence.  `lengths[i]`
+    counts the *real* rows of `em[i]` (delta0 is step 0 and always real); the
+    remaining rows run as tropical-identity steps, so per-sequence results are
+    bit-identical to `viterbi_forward` on the unpadded prefix.
+
+    Returns (psi (B, T, K) int32, delta_T (B, K)).  psi rows at padded steps
+    are the identity permutation.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, T, K = em.shape
+    if T == 0:
+        return jnp.zeros((B, 0, K), jnp.int32), delta0
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    if not _kernel_fits(log_A, K, bt, vmem_limit_bytes):
+        pad = jnp.arange(T)[None, :] >= lengths[:, None]
+        return _ref_fwd_masked_batch_jit(log_A, em, delta0, pad)
+    Tp = int(np.ceil(T / bt)) * bt
+    em_p = jnp.pad(em, ((0, 0), (0, Tp - T), (0, 0)))
+    pad = (jnp.arange(Tp)[None, :] >= lengths[:, None]).astype(em.dtype)
+    psi, delta_T = _vit_fwd_batch_pallas(log_A, em_p, delta0, pad, bt=bt,
+                                         interpret=interpret)
+    return psi[:, :T], delta_T
 
 
 def viterbi_chunk_step(log_A: jax.Array, em_chunk: jax.Array, delta: jax.Array,
@@ -104,6 +154,47 @@ def viterbi_decode_fused(log_pi: jax.Array, log_A: jax.Array, em: jax.Array,
     return jnp.concatenate([prefix, q_last[None]]), delta_T[q_last]
 
 
+def viterbi_decode_fused_batch(log_pi: jax.Array, log_A: jax.Array,
+                               em: jax.Array, lengths: jax.Array | None = None,
+                               *, bt: int = 8, interpret: bool | None = None):
+    """Batched full Viterbi decode: one batch-grid kernel launch + vmapped
+    XLA backtracking.
+
+    Args:
+      em:      (B, T, K) emissions, row i real for the first lengths[i] steps.
+      lengths: optional (B,) int32 true lengths (None means full length).
+
+    Returns:
+      (paths (B, T) int32, scores (B,)).  paths[i, t] for t >= lengths[i]
+      repeat the sequence's final decoded state (the identity backpointers of
+      the pad steps); slice to [:lengths[i]] for the true decode.
+    """
+    B, T, K = em.shape
+    delta0 = log_pi[None, :] + em[:, 0, :]
+    if T == 1:
+        q = jnp.argmax(delta0, axis=1).astype(jnp.int32)
+        return q[:, None], jnp.max(delta0, axis=1)
+    if lengths is None:
+        lengths = jnp.full((B,), T, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    psi, delta_T = viterbi_forward_batch(
+        log_A, em[:, 1:], delta0, jnp.maximum(lengths - 1, 0),
+        bt=bt, interpret=interpret)
+    q_last = jnp.argmax(delta_T, axis=1).astype(jnp.int32)
+
+    def back_one(q, psis):
+        def back(q, psi_t):
+            q_prev = psi_t[q].astype(jnp.int32)
+            return q_prev, q_prev
+        _, prefix = jax.lax.scan(back, q, psis, reverse=True)
+        return prefix
+
+    prefix = jax.vmap(back_one)(q_last, psi)
+    paths = jnp.concatenate([prefix, q_last[:, None]], axis=1)
+    scores = jnp.take_along_axis(delta_T, q_last[:, None], axis=1)[:, 0]
+    return paths, scores
+
+
 def beam_step(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
               states: jax.Array, *, chunk: int = 256,
               interpret: bool | None = None):
@@ -118,5 +209,6 @@ def beam_step(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
                              interpret=interpret)
 
 
-__all__ = ["tropical_matmul", "viterbi_forward", "viterbi_chunk_step",
-           "viterbi_decode_fused", "beam_step"]
+__all__ = ["tropical_matmul", "viterbi_forward", "viterbi_forward_batch",
+           "viterbi_chunk_step", "viterbi_decode_fused",
+           "viterbi_decode_fused_batch", "beam_step"]

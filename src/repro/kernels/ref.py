@@ -27,6 +27,28 @@ def viterbi_forward_ref(log_A: jax.Array, em: jax.Array, delta0: jax.Array):
     return psis, delta_T
 
 
+def viterbi_forward_masked_ref(log_A: jax.Array, em: jax.Array,
+                               delta0: jax.Array, pad: jax.Array):
+    """Reference for the kernel's tropical-identity pad steps.
+
+    `pad` is a (T,) bool mask; masked steps freeze delta and emit identity
+    backpointers, so the result is bit-identical to running the unmasked
+    recursion on the unpadded prefix.
+    """
+    K = log_A.shape[0]
+    eye = jnp.arange(K, dtype=jnp.int32)
+
+    def step(delta, inp):
+        em_t, is_pad = inp
+        scores = delta[:, None] + log_A
+        psi = jnp.argmax(scores, axis=0).astype(jnp.int32)
+        new = jnp.max(scores, axis=0) + em_t
+        return jnp.where(is_pad, delta, new), jnp.where(is_pad, eye, psi)
+
+    delta_T, psis = jax.lax.scan(step, delta0, (em, pad))
+    return psis, delta_T
+
+
 def beam_step_ref(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
                   states: jax.Array):
     """Reference for kernels.beam_stream.beam_step.
@@ -42,4 +64,5 @@ def beam_step_ref(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
     return top_s, top_st.astype(jnp.int32), from_b[top_st]
 
 
-__all__ = ["tropical_matmul_ref", "viterbi_forward_ref", "beam_step_ref"]
+__all__ = ["tropical_matmul_ref", "viterbi_forward_ref",
+           "viterbi_forward_masked_ref", "beam_step_ref"]

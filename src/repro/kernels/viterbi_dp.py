@@ -1,16 +1,28 @@
-"""Fused Viterbi forward-pass Pallas TPU kernel.
+"""Fused Viterbi forward-pass Pallas TPU kernel (single-sequence and batched).
 
 Runs the whole DP recursion
     delta_t[j] = max_k (delta_{t-1}[k] + log_A[k, j]) + em[t, j]
 inside one kernel: the transition matrix stays resident in VMEM for the entire
-sequence, emissions stream in (bt, K) blocks through the Pallas pipeline (which
+launch, emissions stream in (bt, K) blocks through the Pallas pipeline (which
 double-buffers them — the paper's DDR->BRAM double-buffering scheme realised as
 HBM->VMEM), backpointers stream out, and delta is carried across sequential grid
 steps in a VMEM scratch.  Compared with the XLA `lax.scan` lowering this removes
 the per-step HBM round-trip of delta (2*K*4 B/step) and the per-step kernel
 launch — the DP becomes emission-streaming-bound, its roofline floor.
 
-Constraints (checked in `ops.viterbi_forward`):
+The grid is (B, T // bt): the batch axis is the outer (slowest) grid dimension,
+so one launch decodes a whole request bucket with `log_A` loaded exactly once.
+The delta scratch is re-seeded from `delta0[b]` at each sequence's first block,
+which is what makes the cross-block carry legal per sequence.
+
+Ragged batches are handled by a per-step pad mask streamed alongside the
+emissions: a masked step is a *tropical identity* — delta is left unchanged and
+the emitted backpointer row is the identity permutation — so scores and
+backtracked paths are bit-identical to decoding each sequence at its true
+length.  The same mask lets odd T pad up to a bt multiple instead of degrading
+the block size.
+
+Constraints (checked in `ops.viterbi_forward[_batch]`):
   * K multiple of 128 (lane width), K^2 * 4 B + working set within VMEM
     (K <= 1024 fp32 with default bt; larger K falls back to the XLA path).
   * TPU grid iteration is sequential ("arbitrary" dimension semantics), which is
@@ -30,68 +42,100 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
-def _viterbi_fwd_kernel(a_ref, em_ref, d0_ref, psi_ref, dT_ref, dscr, *,
-                        bt: int, nsteps: int):
-    ti = pl.program_id(0)
+def _viterbi_fwd_kernel(a_ref, em_ref, pad_ref, d0_ref, psi_ref, dT_ref, dscr,
+                        *, bt: int, nsteps: int):
+    ti = pl.program_id(1)                    # time-block index (b is axis 0)
 
     @pl.when(ti == 0)
-    def _seed():
-        dscr[0, :] = d0_ref[...]
+    def _seed():                             # new sequence: re-seed the carry
+        dscr[0, :] = d0_ref[0, :]
 
     log_a = a_ref[...]                       # (K, K), resident
-    delta = dscr[0, :]                       # (K,)
+    K = log_a.shape[0]
+    eye = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)[0]
 
     def body(s, delta):
         scores = delta[:, None] + log_a      # (K_src, K_dst)
-        psi_ref[s, :] = jnp.argmax(scores, axis=0).astype(jnp.int32)
-        return jnp.max(scores, axis=0) + em_ref[s, :]
+        psi = jnp.argmax(scores, axis=0).astype(jnp.int32)
+        new = jnp.max(scores, axis=0) + em_ref[0, s, :]
+        is_pad = pad_ref[0, s] > 0.5         # tropical-identity step
+        psi_ref[0, s, :] = jnp.where(is_pad, eye, psi)
+        return jnp.where(is_pad, delta, new)
 
-    delta = jax.lax.fori_loop(0, bt, body, delta)
+    delta = jax.lax.fori_loop(0, bt, body, dscr[0, :])
     dscr[0, :] = delta
 
     @pl.when(ti == nsteps - 1)
     def _emit():
-        dT_ref[...] = delta
+        dT_ref[0, :] = delta
 
 
 @functools.partial(jax.jit, static_argnames=("bt", "interpret"))
-def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array, *,
+def viterbi_forward_batch(log_A: jax.Array, em: jax.Array, delta0: jax.Array,
+                          pad: jax.Array | None = None, *,
+                          bt: int = 8, interpret: bool = False):
+    """Batched fused forward pass.
+
+    Args:
+      log_A:  (K, K) transition log-probs, shared across the batch.
+      em:     (B, T, K) emission scores for steps 1..T (step 0 is in `delta0`).
+      delta0: (B, K) initial DP states.
+      pad:    optional (B, T); entries > 0.5 mark tropical-identity steps
+              (delta frozen, identity backpointers).  None means no padding.
+
+    Returns:
+      (psi, delta_T): (B, T, K) int32 backpointers and final (B, K) DP states.
+    """
+    B, T, K = em.shape
+    assert T % bt == 0, (T, bt)
+    nsteps = T // bt
+    if pad is None:
+        pad = jnp.zeros((B, T), em.dtype)
+    pad = pad.astype(em.dtype)
+
+    return pl.pallas_call(
+        functools.partial(_viterbi_fwd_kernel, bt=bt, nsteps=nsteps),
+        grid=(B, nsteps),
+        in_specs=[
+            pl.BlockSpec((K, K), lambda b, ti: (0, 0)),      # resident
+            pl.BlockSpec((1, bt, K), lambda b, ti: (b, ti, 0)),  # streamed
+            pl.BlockSpec((1, bt), lambda b, ti: (b, ti)),
+            pl.BlockSpec((1, K), lambda b, ti: (b, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bt, K), lambda b, ti: (b, ti, 0)),  # streamed out
+            pl.BlockSpec((1, K), lambda b, ti: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, K), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), em.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, K), em.dtype)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(log_A, em, pad, delta0)
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array,
+                    pad: jax.Array | None = None, *,
                     bt: int = 8, interpret: bool = False):
-    """Fused forward pass.
+    """Single-sequence fused forward pass (B=1 view of the batched kernel).
 
     Args:
       log_A:  (K, K) transition log-probs.
       em:     (T, K) emission scores for steps 1..T (step 0 is in `delta0`).
       delta0: (K,) initial DP state.
+      pad:    optional (T,) tropical-identity step mask (see batch variant).
 
     Returns:
       (psi, delta_T): (T, K) int32 backpointers and final (K,) DP state.
     """
-    T, K = em.shape
-    assert T % bt == 0, (T, bt)
-    nsteps = T // bt
-
-    return pl.pallas_call(
-        functools.partial(_viterbi_fwd_kernel, bt=bt, nsteps=nsteps),
-        grid=(nsteps,),
-        in_specs=[
-            pl.BlockSpec((K, K), lambda ti: (0, 0)),   # resident all steps
-            pl.BlockSpec((bt, K), lambda ti: (ti, 0)),  # streamed
-            pl.BlockSpec((K,), lambda ti: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((bt, K), lambda ti: (ti, 0)),  # streamed out
-            pl.BlockSpec((K,), lambda ti: (0,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((T, K), jnp.int32),
-            jax.ShapeDtypeStruct((K,), em.dtype),
-        ],
-        scratch_shapes=[pltpu.VMEM((1, K), em.dtype)],
-        compiler_params=_CompilerParams(
-            dimension_semantics=("arbitrary",)),
-        interpret=interpret,
-    )(log_A, em, delta0)
+    psi, delta_T = viterbi_forward_batch(
+        log_A, em[None], delta0[None], None if pad is None else pad[None],
+        bt=bt, interpret=interpret)
+    return psi[0], delta_T[0]
 
 
-__all__ = ["viterbi_forward"]
+__all__ = ["viterbi_forward", "viterbi_forward_batch"]

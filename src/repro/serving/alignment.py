@@ -18,33 +18,42 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core import flash_bs_viterbi, flash_viterbi, viterbi_vanilla
+from repro.core import flash_bs_viterbi, viterbi_decode_batch
 from repro.core.hmm import HMM
 
 
 @dataclasses.dataclass(frozen=True)
 class AlignmentConfig:
-    method: str = "flash_bs"       # flash | flash_bs | vanilla
+    method: str = "flash_bs"       # flash | flash_bs | vanilla | fused
     beam_width: int = 128
     parallelism: int = 8
     chunk: int = 128
 
 
 def make_alignment_head(hmm_log_pi, hmm_log_A, cfg: AlignmentConfig):
-    """Returns align(emissions (B, T, K)) -> (paths (B, T) int32, scores (B,))."""
+    """Returns align(emissions (B, T, K), lengths=None) -> (paths, scores).
 
-    def one(em):
-        if cfg.method == "flash":
-            return flash_viterbi(hmm_log_pi, hmm_log_A, em,
-                                 parallelism=cfg.parallelism, lanes=None)
-        if cfg.method == "vanilla":
-            return viterbi_vanilla(hmm_log_pi, hmm_log_A, em)
-        return flash_bs_viterbi(hmm_log_pi, hmm_log_A, em,
-                                beam_width=cfg.beam_width,
-                                parallelism=cfg.parallelism, lanes=None,
-                                chunk=cfg.chunk)
+    `lengths` (B,) gives each request's true frame count; pad frames run as
+    tropical-identity steps inside `viterbi_decode_batch`, so results are
+    bit-identical to unbatched decodes of the unpadded payloads (for exact
+    methods; FLASH-BS keeps its beam approximation but no pad corruption).
+    This is the `decode_batch_fn` contract `BatchScheduler` expects.
+    """
 
-    return jax.jit(jax.vmap(one))
+    @jax.jit
+    def _align(em, lengths):
+        return viterbi_decode_batch(em, hmm_log_pi, hmm_log_A, lengths,
+                                    method=cfg.method,
+                                    parallelism=cfg.parallelism, lanes=None,
+                                    beam_width=cfg.beam_width, chunk=cfg.chunk)
+
+    def align(em, lengths=None):
+        em = jnp.asarray(em)
+        if lengths is None:
+            lengths = jnp.full((em.shape[0],), em.shape[1], jnp.int32)
+        return _align(em, jnp.asarray(lengths, jnp.int32))
+
+    return align
 
 
 def make_e2e_align_step(model, params_treedef_hint, hmm: HMM,

@@ -2,8 +2,15 @@
 
 Continuous-batching-lite: requests queue up, the scheduler packs up to
 `max_batch` compatible requests (same HMM / model), pads sequences to the
-bucket boundary, runs one fused decode, and fans results back out.  Buckets
+bucket boundary, runs one batched decode, and fans results back out.  Buckets
 keep jit cache hits high (one compile per bucket, not per length).
+
+The decode function receives the true lengths alongside the padded batch:
+``decode_batch_fn(padded (B, Tb, K), lengths (B,) int32) -> (paths, scores)``.
+Length-aware decoders (``core.viterbi_decode_batch``) mask pad frames as
+tropical-identity steps, so every request's path and score are bit-identical
+to an unbatched decode of its unpadded payload — padding is a pure throughput
+trick, never an approximation.
 """
 
 from __future__ import annotations
@@ -64,15 +71,12 @@ class BatchScheduler:
                 rest.append(r)
         self.queue.extendleft(reversed(rest))
 
-        lens = [len(r.payload) for r in batch]
+        lens = np.asarray([len(r.payload) for r in batch], np.int32)
         K = batch[0].payload.shape[-1]
         padded = np.zeros((len(batch), bucket, K), np.float32)
         for i, r in enumerate(batch):
-            padded[i, :lens[i]] = r.payload
-            if lens[i] < bucket:  # pad frames: uniform emissions (no-op-ish)
-                padded[i, lens[i]:] = 0.0
-        outs = self.fn(padded)
-        paths, scores = outs
+            padded[i, :lens[i]] = r.payload  # pad tail masked by the decoder
+        paths, scores = self.fn(padded, lens)
         for i, r in enumerate(batch):
             r.result = (np.asarray(paths[i][:lens[i]]), float(scores[i]))
             r.done = True

@@ -1,0 +1,138 @@
+"""Batched-vs-looped equivalence: `viterbi_decode_batch` with ragged lengths
+must be bit-identical per sequence to a Python loop of `viterbi_decode` calls
+(exact methods; flash_bs is run at beam_width=K where it is exact)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (erdos_renyi_hmm, random_emissions, chunked_vmap,
+                        flash_viterbi, flash_bs_viterbi,
+                        viterbi_decode, viterbi_decode_batch, BATCH_METHODS)
+
+K, TMAX = 32, 40
+LENGTHS = np.array([TMAX, 17, 1, 33, TMAX], np.int32)  # ragged incl. T=1, max
+METHOD_KW = {
+    "vanilla": {},
+    "fused": {},
+    "flash": dict(parallelism=4),
+    "flash_bs": dict(parallelism=4, beam_width=K, chunk=16),
+}
+
+
+@pytest.fixture(scope="module")
+def batch_problem():
+    key = jax.random.key(123)
+    k1, k2 = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, K, edge_prob=0.4)
+    em = random_emissions(k2, len(LENGTHS) * TMAX, K).reshape(
+        len(LENGTHS), TMAX, K)
+    return hmm, em
+
+
+def _assert_matches_loop(hmm, em, lengths, method, **kw):
+    paths, scores = viterbi_decode_batch(em, hmm.log_pi, hmm.log_A, lengths,
+                                         method=method, **kw)
+    assert paths.shape == em.shape[:2] and paths.dtype == jnp.int32
+    assert scores.shape == (em.shape[0],)
+    for i, L in enumerate(lengths):
+        p, s = viterbi_decode(em[i, :int(L)], hmm.log_pi, hmm.log_A,
+                              method=method, **kw)
+        assert np.array_equal(np.asarray(paths[i, :int(L)]), np.asarray(p)), \
+            (method, i)
+        assert np.isclose(float(scores[i]), float(s), rtol=1e-6, atol=0), \
+            (method, i)
+
+
+@pytest.mark.parametrize("method", BATCH_METHODS)
+def test_batch_matches_loop_ragged(batch_problem, method):
+    hmm, em = batch_problem
+    _assert_matches_loop(hmm, em, LENGTHS, method, **METHOD_KW[method])
+
+
+@pytest.mark.parametrize("method", ["vanilla", "fused"])
+def test_batch_all_equal_lengths_and_default(batch_problem, method):
+    hmm, em = batch_problem
+    equal = np.full((em.shape[0],), TMAX, np.int32)
+    _assert_matches_loop(hmm, em, equal, method)
+    # lengths=None means full length — same result as explicit lengths
+    p0, s0 = viterbi_decode_batch(em, hmm.log_pi, hmm.log_A, method=method)
+    p1, s1 = viterbi_decode_batch(em, hmm.log_pi, hmm.log_A, equal,
+                                  method=method)
+    assert np.array_equal(np.asarray(p0), np.asarray(p1))
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
+@pytest.mark.parametrize("method", BATCH_METHODS)
+def test_batch_T1_edge(batch_problem, method):
+    hmm, em = batch_problem
+    em1 = em[:, :1]
+    paths, scores = viterbi_decode_batch(em1, hmm.log_pi, hmm.log_A,
+                                         method=method, **METHOD_KW[method])
+    for i in range(em1.shape[0]):
+        p, s = viterbi_decode(em1[i], hmm.log_pi, hmm.log_A, method="vanilla")
+        assert np.array_equal(np.asarray(paths[i]), np.asarray(p))
+        assert np.isclose(float(scores[i]), float(s), rtol=1e-6)
+
+
+def test_batch_pad_tail_repeats_final_state(batch_problem):
+    hmm, em = batch_problem
+    paths, _ = viterbi_decode_batch(em, hmm.log_pi, hmm.log_A, LENGTHS,
+                                    method="fused")
+    for i, L in enumerate(LENGTHS):
+        tail = np.asarray(paths[i, int(L):])
+        assert np.all(tail == np.asarray(paths[i, int(L) - 1]))
+
+
+def test_batch_unknown_method_raises(batch_problem):
+    hmm, em = batch_problem
+    with pytest.raises(ValueError):
+        viterbi_decode_batch(em, hmm.log_pi, hmm.log_A, method="nope")
+
+
+def test_batch_pad_frames_do_not_leak(batch_problem):
+    """Garbage in the pad frames must not change any result (the scheduler
+    zero-pads, but the contract is 'anything')."""
+    hmm, em = batch_problem
+    em_dirty = np.array(em)
+    for i, L in enumerate(LENGTHS):
+        em_dirty[i, int(L):] = 1e3
+    clean = viterbi_decode_batch(em, hmm.log_pi, hmm.log_A, LENGTHS,
+                                 method="fused")
+    dirty = viterbi_decode_batch(jnp.asarray(em_dirty), hmm.log_pi,
+                                 hmm.log_A, LENGTHS, method="fused")
+    assert np.array_equal(np.asarray(clean[0]), np.asarray(dirty[0]))
+    assert np.array_equal(np.asarray(clean[1]), np.asarray(dirty[1]))
+
+
+# ---------------------------------------------------------------------------
+# chunked_vmap remainder handling (odd lane counts)
+# ---------------------------------------------------------------------------
+
+def test_chunked_vmap_remainder():
+    xs = jnp.arange(7.0)
+    out = chunked_vmap(lambda x: x * 2, (xs,), lanes=3)  # 7 = 2*3 + 1
+    assert np.array_equal(np.asarray(out), np.asarray(xs) * 2)
+
+
+@pytest.mark.parametrize("lanes", [3, 5])
+def test_flash_odd_lanes(batch_problem, lanes):
+    hmm, em = batch_problem
+    e = em[0]
+    p_ref, s_ref = flash_viterbi(hmm.log_pi, hmm.log_A, e, parallelism=8,
+                                 lanes=None)
+    p, s = flash_viterbi(hmm.log_pi, hmm.log_A, e, parallelism=8, lanes=lanes)
+    assert np.array_equal(np.asarray(p), np.asarray(p_ref))
+    assert float(s) == float(s_ref)
+
+
+def test_flash_bs_odd_lanes(batch_problem):
+    hmm, em = batch_problem
+    e = em[0]
+    p_ref, s_ref = flash_bs_viterbi(hmm.log_pi, hmm.log_A, e, beam_width=K,
+                                    parallelism=8, lanes=None, chunk=16)
+    p, s = flash_bs_viterbi(hmm.log_pi, hmm.log_A, e, beam_width=K,
+                            parallelism=8, lanes=3, chunk=16)
+    assert np.array_equal(np.asarray(p), np.asarray(p_ref))
+    assert float(s) == float(s_ref)

@@ -48,6 +48,81 @@ def test_viterbi_forward_large_k_fallback():
     assert np.array_equal(np.asarray(psi), np.asarray(psir))
 
 
+@pytest.mark.parametrize("T", [7, 13, 31, 97])
+def test_viterbi_forward_prime_lengths(T):
+    """Odd T pads up to a bt multiple with tropical-identity steps instead of
+    degrading the kernel to bt=1 tiling; results stay exact."""
+    K = 128
+    k1, k2, k3 = jax.random.split(jax.random.key(T), 3)
+    A = jax.random.normal(k1, (K, K))
+    em = jax.random.normal(k2, (T, K))
+    d0 = jax.random.normal(k3, (K,))
+    psi, dT = ops.viterbi_forward(A, em, d0)
+    psir, dTr = ref.viterbi_forward_ref(A, em, d0)
+    assert psi.shape == (T, K)
+    assert np.array_equal(np.asarray(psi), np.asarray(psir))
+    assert np.array_equal(np.asarray(dT), np.asarray(dTr))
+
+
+def test_viterbi_decode_fused_prime_length_matches_vanilla():
+    from repro.core import viterbi_vanilla, erdos_renyi_hmm, random_emissions
+    k1, k2 = jax.random.split(jax.random.key(97))
+    hmm = erdos_renyi_hmm(k1, 128, edge_prob=0.4)
+    em = random_emissions(k2, 97, 128)          # prime T
+    p1, s1 = ops.viterbi_decode_fused(hmm.log_pi, hmm.log_A, em)
+    p2, s2 = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_allclose(float(s1), float(s2), rtol=1e-6)
+
+
+def test_viterbi_forward_batch_ragged():
+    """Batch-grid kernel with ragged lengths: per-sequence rows bit-identical
+    to the single-sequence reference; pad rows are identity backpointers."""
+    B, T, K = 4, 20, 128
+    lengths = [20, 7, 1, 20]
+    k1, k2, k3 = jax.random.split(jax.random.key(3), 3)
+    A = jax.random.normal(k1, (K, K))
+    em = jax.random.normal(k2, (B, T, K))
+    d0 = jax.random.normal(k3, (B, K))
+    psi, dT = ops.viterbi_forward_batch(A, em, d0, jnp.asarray(lengths))
+    eye = np.arange(K, dtype=np.int32)
+    for i, L in enumerate(lengths):
+        psir, dTr = ref.viterbi_forward_ref(A, em[i, :L], d0[i])
+        assert np.array_equal(np.asarray(psi[i, :L]), np.asarray(psir)), i
+        assert np.array_equal(np.asarray(dT[i]), np.asarray(dTr)), i
+        assert np.all(np.asarray(psi[i, L:]) == eye[None, :]), i
+
+
+def test_viterbi_forward_batch_fallback_matches_kernel_semantics():
+    """K not 128-aligned takes the vmapped masked XLA path, same results."""
+    B, T, K = 3, 11, 100
+    lengths = [11, 4, 1]
+    k1, k2, k3 = jax.random.split(jax.random.key(4), 3)
+    A = jax.random.normal(k1, (K, K))
+    em = jax.random.normal(k2, (B, T, K))
+    d0 = jax.random.normal(k3, (B, K))
+    psi, dT = ops.viterbi_forward_batch(A, em, d0, jnp.asarray(lengths))
+    for i, L in enumerate(lengths):
+        psir, dTr = ref.viterbi_forward_ref(A, em[i, :L], d0[i])
+        assert np.array_equal(np.asarray(psi[i, :L]), np.asarray(psir)), i
+        assert np.array_equal(np.asarray(dT[i]), np.asarray(dTr)), i
+
+
+def test_viterbi_decode_fused_batch_matches_loop():
+    from repro.core import erdos_renyi_hmm, random_emissions
+    B, T, K = 4, 19, 128
+    lengths = [19, 8, 1, 13]
+    k1, k2 = jax.random.split(jax.random.key(6))
+    hmm = erdos_renyi_hmm(k1, K, edge_prob=0.4)
+    em = random_emissions(k2, B * T, K).reshape(B, T, K)
+    paths, scores = ops.viterbi_decode_fused_batch(
+        hmm.log_pi, hmm.log_A, em, jnp.asarray(lengths))
+    for i, L in enumerate(lengths):
+        p, s = ops.viterbi_decode_fused(hmm.log_pi, hmm.log_A, em[i, :L])
+        assert np.array_equal(np.asarray(paths[i, :L]), np.asarray(p)), i
+        assert float(scores[i]) == float(s), i
+
+
 def test_viterbi_decode_fused_matches_vanilla():
     from repro.core import viterbi_vanilla, erdos_renyi_hmm, random_emissions
     k1, k2 = jax.random.split(jax.random.key(5))

@@ -163,8 +163,9 @@ def test_pipeline_labels_are_shifted_tokens():
 def test_batch_scheduler_buckets_and_results():
     from repro.serving.scheduler import BatchScheduler
 
-    def fake_decode(batch):                   # (B, T, K) -> paths, scores
+    def fake_decode(batch, lengths):          # (B, T, K), (B,) -> paths, scores
         B, T, K = batch.shape
+        assert lengths.shape == (B,)
         return np.zeros((B, T), np.int32), np.arange(B, dtype=np.float32)
 
     sched = BatchScheduler(fake_decode, max_batch=3, buckets=(64, 128))

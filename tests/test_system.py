@@ -12,7 +12,8 @@ from repro.serving.scheduler import BatchScheduler
 
 def test_alignment_serving_end_to_end():
     """Encoder-emissions -> FLASH-BS alignment through the batch scheduler,
-    validated against exact Viterbi (paper Fig. 9 style)."""
+    validated against exact Viterbi (paper Fig. 9 style).  Ragged lengths are
+    masked by the batched decoder, so the only error source is the beam."""
     key = jax.random.key(0)
     k1, k2 = jax.random.split(key)
     hmm = left_to_right_hmm(k1, 64, 16)
@@ -21,15 +22,15 @@ def test_alignment_serving_end_to_end():
                                                beam_width=48, parallelism=4))
     sched = BatchScheduler(head, max_batch=4, buckets=(64,))
     rng = np.random.default_rng(0)
-    # exact-bucket lengths: pad frames extend the DP and perturb the decoded
-    # prefix (documented scheduler approximation, tested separately below)
-    reqs = [sched.submit(rng.standard_normal((64, 64)).astype(np.float32))
-            for _ in range(6)]
+    lens = [64, 40, 64, 25, 64, 52]
+    reqs = [sched.submit(rng.standard_normal((t, 64)).astype(np.float32))
+            for t in lens]
     done = sched.drain()
     assert len(done) == 6
     errs = []
     for r in done:
         em = jnp.asarray(r.payload)
+        assert r.result[0].shape == (len(r.payload),)
         _, opt = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
         errs.append(float(relative_error(opt, r.result[1])))
     assert np.mean(errs) < 0.05  # B=48/64 beam on random emissions
@@ -58,18 +59,25 @@ def test_training_resume_bitexact(tmp_path):
     np.testing.assert_allclose(full[5:], resumed, rtol=2e-4, atol=2e-5)
 
 
-def test_scheduler_padding_is_bounded_approximation():
-    """Bucket padding perturbs alignment scores only mildly (tail effect)."""
+def test_scheduler_bit_identical_to_unbatched():
+    """Regression for the padded-batch corruption bug: with an exact method,
+    every scheduled request's path AND score must be bit-identical to an
+    unbatched decode of its unpadded payload — bucket pad frames run as
+    tropical-identity steps, never as real DP transitions."""
     key = jax.random.key(2)
-    k1, k2 = jax.random.split(key)
-    hmm = left_to_right_hmm(k1, 32, 8)
+    k1, _ = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, 32, edge_prob=0.4)
+    head = make_alignment_head(hmm.log_pi, hmm.log_A,
+                               AlignmentConfig(method="fused"))
+    sched = BatchScheduler(head, max_batch=4, buckets=(48,))
     rng = np.random.default_rng(1)
-    em = rng.standard_normal((24, 32)).astype(np.float32)
-    em_pad = np.zeros((32, 32), np.float32)
-    em_pad[:24] = em
-    _, exact = viterbi_vanilla(hmm.log_pi, hmm.log_A, jnp.asarray(em))
-    from repro.core import flash_bs_viterbi, path_score
-    p_pad, _ = flash_bs_viterbi(hmm.log_pi, hmm.log_A, jnp.asarray(em_pad),
-                                beam_width=32, parallelism=4)
-    ll = path_score(hmm.log_pi, hmm.log_A, jnp.asarray(em), p_pad[:24])
-    assert float(relative_error(exact, ll)) < 0.25
+    lens = [48, 20, 33, 1, 48]
+    reqs = [sched.submit(rng.standard_normal((t, 32)).astype(np.float32))
+            for t in lens]
+    done = sched.drain()
+    assert len(done) == len(lens)
+    for r in done:
+        em = jnp.asarray(r.payload)
+        opt_path, opt_score = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+        assert np.array_equal(r.result[0], np.asarray(opt_path))
+        assert np.isclose(r.result[1], float(opt_score), rtol=1e-6, atol=0)
