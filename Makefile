@@ -3,8 +3,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench bench-smoke example-quickstart example-streaming \
-	example-batch
+.PHONY: test test-fast test-dist bench bench-smoke example-quickstart \
+	example-streaming example-batch
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -13,6 +13,11 @@ test-fast:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q \
 	    tests/test_core_viterbi.py tests/test_kernels.py tests/test_batch.py \
 	    tests/test_online.py
+
+test-dist:  # distributed suite: 8 virtual host devices (subprocess-forced) + compat shim
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PY) -m pytest -x -q tests/test_distributed.py tests/test_jaxcompat.py
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run

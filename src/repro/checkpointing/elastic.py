@@ -12,6 +12,19 @@ import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.runtime.jaxcompat import abstract_mesh
+
+
+def abstract_target_mesh(axis_sizes, axis_names):
+    """Describe a rescale *target* topology without owning its devices.
+
+    `plan_rescale` only reads ``mesh.shape``, so a scheduler planning a
+    shrink/grow on a login host passes the result of this instead of a real
+    `Mesh`.  Goes through `runtime.jaxcompat` because `AbstractMesh`'s
+    constructor signature differs between jax 0.4.x and current jax.
+    """
+    return abstract_mesh(axis_sizes, axis_names)
+
 
 def reshard(tree, mesh: Mesh, spec_tree):
     """device_put every leaf under (mesh, spec)."""
@@ -50,4 +63,4 @@ def plan_rescale(shape_tree, spec_tree, mesh: Mesh) -> list[str]:
     return problems
 
 
-__all__ = ["reshard", "plan_rescale"]
+__all__ = ["reshard", "plan_rescale", "abstract_target_mesh"]

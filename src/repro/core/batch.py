@@ -24,13 +24,24 @@ Methods:
 
 Path entries at padded steps repeat the sequence's final decoded state
 (identity backpointers); slice row i to [:lengths[i]] for the true path.
+
+Multi-device: pass ``mesh=``/``data_axis=`` to shard the request bucket over
+a mesh axis (`shard_map`, HMM tensors replicated, zero collectives — the
+sequences are independent).  Per-sequence results are bit-identical to the
+single-device decode; `tests/test_distributed.py` pins this on 8 virtual
+devices.
 """
 
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec
 
+from ..runtime.jaxcompat import shard_map
 from .vanilla import viterbi_vanilla_masked
 from .flash import plan_padding, _flash_padded
 from .flash_bs import pad_state_space, _flash_bs_padded
@@ -40,6 +51,26 @@ BATCH_METHODS = ("vanilla", "flash", "flash_bs", "fused")
 
 def _pad_mask(T: int, lengths: jax.Array) -> jax.Array:
     return jnp.arange(T)[None, :] >= lengths[:, None]    # (B, T) True == pad
+
+
+def _validate_lengths(lengths: jax.Array, T: int) -> None:
+    """Eagerly reject out-of-range lengths instead of silently clipping.
+
+    Clipping (`jnp.clip(lengths, 1, T)`) used to paper over caller bugs — a
+    0 or T+overrun length silently decoded the wrong frame span.  Concrete
+    lengths are checked here; traced lengths (inside jit / shard_map) cannot
+    be inspected, so out-of-range traced values are a caller contract
+    violation with undefined results.
+    """
+    try:
+        conc = np.asarray(lengths)
+    except (jax.errors.TracerArrayConversionError,
+            jax.errors.ConcretizationTypeError):
+        return
+    if conc.size and (conc.min() < 1 or conc.max() > T):
+        raise ValueError(
+            f"lengths must lie in [1, T={T}]; got range "
+            f"[{int(conc.min())}, {int(conc.max())}]")
 
 
 def _vanilla_batch(log_pi, log_A, em, pad):
@@ -84,6 +115,8 @@ def viterbi_decode_batch(
     beam_width: int = 128,
     chunk: int = 128,
     bt: int = 8,
+    mesh=None,
+    data_axis: str = "data",
 ) -> tuple[jax.Array, jax.Array]:
     """Decode a (possibly ragged) batch of emission sequences.
 
@@ -91,12 +124,22 @@ def viterbi_decode_batch(
       emissions: (B, T, K) emission log-likelihoods, row i real for the first
         lengths[i] steps (pad frames may hold anything — they are masked).
       log_pi, log_A: shared HMM in log domain.
-      lengths: optional (B,) int true lengths in [1, T]; None means every
-        sequence is full-length.
+      lengths: optional (B,) int true lengths; None means every sequence is
+        full-length.  Lengths are used *as given* — there is no clipping.
+        Every concrete value must lie in [1, T] or a ValueError is raised
+        eagerly; traced lengths (inside jit) cannot be checked and
+        out-of-range values there are a contract violation with undefined
+        results.
       method: one of ``BATCH_METHODS``.  ``vanilla``/``fused`` are exact;
         ``flash`` is exact; ``flash_bs`` is exact when beam_width >= K.
       parallelism, lanes, beam_width, chunk: as in `viterbi_decode`.
       bt: fused-kernel time-block size.
+      mesh: optional `jax.sharding.Mesh`; when given, the batch axis is
+        sharded over ``data_axis`` with `shard_map` (the axis size must
+        divide B) and each device decodes its bucket slice with the exact
+        same per-sequence compute — results stay bit-identical to the
+        single-device call.  The HMM tensors are replicated.
+      data_axis: mesh axis name the batch shards over.
 
     Returns:
       (paths (B, T) int32, scores (B,)): paths[i, :lengths[i]] is the decode
@@ -109,12 +152,19 @@ def viterbi_decode_batch(
     B, T, K = emissions.shape
     if lengths is None:
         lengths = jnp.full((B,), T, jnp.int32)
-    lengths = jnp.clip(jnp.asarray(lengths, jnp.int32), 1, T)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    _validate_lengths(lengths, T)
 
     if T == 1:
         d0 = log_pi[None, :] + emissions[:, 0, :]
         q = jnp.argmax(d0, axis=1).astype(jnp.int32)
         return q[:, None], jnp.max(d0, axis=1)
+
+    if mesh is not None:
+        return _sharded_batch(emissions, log_pi, log_A, lengths, method,
+                              mesh=mesh, data_axis=data_axis,
+                              parallelism=parallelism, lanes=lanes,
+                              beam_width=beam_width, chunk=chunk, bt=bt)
 
     if method == "fused":
         from repro.kernels.ops import viterbi_decode_fused_batch
@@ -132,6 +182,47 @@ def viterbi_decode_batch(
         return _flash_batch(log_pi, log_A, emissions, pad, P, lanes)
     return _flash_bs_batch(log_pi, log_A, emissions, pad, beam_width, P,
                            lanes, chunk)
+
+
+@lru_cache(maxsize=64)
+def _sharded_decoder(mesh, data_axis, method, kw_items):
+    """Build (and cache) the jitted shard_map-ed decoder for one config.
+
+    Cached + jitted so repeated eager `mesh=` calls reuse one compiled
+    callable — jit's cache keys on callable identity, and a fresh shard_map
+    closure per call would retrace (and recompile) every time.
+    """
+    kw = dict(kw_items)
+    Ps = PartitionSpec
+
+    def _local(lp, la, em, ln):
+        return viterbi_decode_batch(em, lp, la, ln, method=method, **kw)
+
+    return jax.jit(shard_map(
+        _local, mesh=mesh,
+        in_specs=(Ps(), Ps(), Ps(data_axis, None, None), Ps(data_axis)),
+        out_specs=(Ps(data_axis, None), Ps(data_axis)),
+        check_replication=False))
+
+
+def _sharded_batch(emissions, log_pi, log_A, lengths, method, *, mesh,
+                   data_axis, **kw):
+    """Shard the request bucket over `data_axis` and decode per device.
+
+    Sequences are independent, so the shard_map body is just the
+    single-device `viterbi_decode_batch` on the local (B/dp, T, K) slice —
+    no collectives, and per-sequence results are bit-identical to the
+    unsharded call (vmap lanes never interact).  log_pi/log_A replicate.
+    """
+    dp = mesh.shape[data_axis]
+    B = emissions.shape[0]
+    if B % dp:
+        raise ValueError(
+            f"mesh axis {data_axis!r}={dp} must divide batch size {B}; pad "
+            f"the bucket with length-1 dummies (serving.alignment does this)")
+    sharded = _sharded_decoder(mesh, data_axis, method,
+                               tuple(sorted(kw.items())))
+    return sharded(log_pi, log_A, emissions, lengths)
 
 
 __all__ = ["viterbi_decode_batch", "BATCH_METHODS"]

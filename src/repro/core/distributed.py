@@ -23,6 +23,15 @@ Two orthogonal axes, composable on the production (data, model) mesh:
 
 Per-step collective cost on the model axis: 2 x all-reduce of K floats/ints —
 this is what the roofline harness measures for the alignment-serving cell.
+
+A third axis, **sequence parallelism over `data`** (`make_batched_flash_decoder`),
+is the serving configuration: whole sequences shard across devices and decode
+through `core.batch.viterbi_decode_batch`, inheriting its ragged-`lengths`
+contract (pad frames are tropical-identity steps — no pad mass in scores).
+
+All `shard_map` use goes through `runtime.jaxcompat`, which bridges the
+jax 0.4.x / current-jax API drift (shard_map location, check_rep/check_vma);
+this module must keep importing and running on both.
 """
 
 from __future__ import annotations
@@ -35,6 +44,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..runtime.jaxcompat import shard_map
 from .hmm import NEG_INF
 from .flash import plan_padding, pad_emissions
 
@@ -202,11 +212,11 @@ def make_flash_viterbi_2d(mesh: Mesh, T: int, K: int, parallelism: int | None = 
                                 jnp.asarray(boundaries), model_axis,
                                 dp_step=dp_step)
 
-    initial_sharded = jax.shard_map(
+    initial_sharded = shard_map(
         _initial, mesh=mesh,
         in_specs=(P(), a_spec, em_spec, P()),
         out_specs=(P(), P(), P()),
-        check_vma=False)
+        check_replication=False)
 
     def _layer(log_pi, log_A_local, em_tiles, pad_tiles, entries, exits, firsts):
         fn = partial(_tp_segment_decode, axis=model_axis, dp_step=dp_step)
@@ -234,21 +244,21 @@ def make_flash_viterbi_2d(mesh: Mesh, T: int, K: int, parallelism: int | None = 
             firsts = jnp.asarray(starts == 0)
 
             if n % dp == 0:  # shard tiles over the data axis
-                layer_sharded = jax.shard_map(
+                layer_sharded = shard_map(
                     _layer, mesh=mesh,
                     in_specs=(P(), a_spec,
                               em_tile_spec, P(data_axis, None),
                               P(data_axis), P(data_axis), P(data_axis)),
                     out_specs=P(data_axis),
-                    check_vma=False)
+                    check_replication=False)
             else:  # thin layers stay replicated over data (still TP over model)
-                layer_sharded = jax.shard_map(
+                layer_sharded = shard_map(
                     _layer, mesh=mesh,
                     in_specs=(P(), a_spec,
                               em_tile_repl, P(None, None),
                               P(None), P(None), P(None)),
                     out_specs=P(None),
-                    check_vma=False)
+                    check_replication=False)
             mids = layer_sharded(log_pi, log_A, em_tiles, pad_tiles,
                                  entries, exits, firsts)
             q_star = q_star.at[jnp.asarray(starts + s // 2 - 1)].set(mids)
@@ -260,24 +270,51 @@ def make_flash_viterbi_2d(mesh: Mesh, T: int, K: int, parallelism: int | None = 
                    out_shardings=(repl, repl))
 
 
-def make_batched_flash_decoder(mesh: Mesh, data_axis: str = "data"):
-    """Batch-of-sequences decoder: sequences shard over the data axis, FLASH
-    runs fully vectorised (lanes=None) within each sequence — the serving-path
-    configuration used by the alignment head."""
-    from .flash import flash_viterbi
+BATCHED_DECODER_METHODS = ("vanilla", "flash", "fused")
 
-    def decode(log_pi, log_A, ems):  # ems: (Bseq, T, K)
-        paths, scores = jax.vmap(
-            lambda e: flash_viterbi(log_pi, log_A, e, parallelism=8, lanes=None)
-        )(ems)
-        return paths, scores
 
+def make_batched_flash_decoder(mesh: Mesh, data_axis: str = "data",
+                               method: str = "flash", *,
+                               parallelism: int = 8, lanes: int | None = None,
+                               bt: int = 8):
+    """Batch-of-sequences serving decoder: sequences shard over `data_axis`.
+
+    Built on `core.batch.viterbi_decode_batch` (the single entry point every
+    serving path goes through), so it inherits the ragged-``lengths``
+    contract: pad frames run as tropical-identity steps, scores carry no
+    pad-transition mass, and each sequence's result is bit-identical to a
+    single-device unbatched decode of its unpadded payload.
+
+    Args:
+      mesh: the device mesh; ``mesh.shape[data_axis]`` must divide B.
+      method: ``vanilla`` (masked-scan oracle), ``flash`` (wavefront, fully
+        vectorised per sequence with lanes=None by default), or ``fused``
+        (batch-grid Pallas kernel).
+      parallelism / lanes / bt: forwarded to `viterbi_decode_batch`.
+
+    Returns a jitted ``decode(log_pi, log_A, ems (B, T, K), lengths (B,))
+    -> (paths (B, T), scores (B,))``.
+    """
+    if method not in BATCHED_DECODER_METHODS:
+        raise ValueError(f"unknown method {method!r}; choose from "
+                         f"{BATCHED_DECODER_METHODS}")
+    from .batch import viterbi_decode_batch
+
+    def decode(log_pi, log_A, ems, lengths):
+        return viterbi_decode_batch(ems, log_pi, log_A, lengths,
+                                    method=method, parallelism=parallelism,
+                                    lanes=lanes, bt=bt,
+                                    mesh=mesh, data_axis=data_axis)
+
+    repl = NamedSharding(mesh, P())
     return jax.jit(
         decode,
-        in_shardings=(NamedSharding(mesh, P()), NamedSharding(mesh, P()),
-                      NamedSharding(mesh, P(data_axis, None, None))),
+        in_shardings=(repl, repl,
+                      NamedSharding(mesh, P(data_axis, None, None)),
+                      NamedSharding(mesh, P(data_axis))),
         out_shardings=(NamedSharding(mesh, P(data_axis, None)),
                        NamedSharding(mesh, P(data_axis))))
 
 
-__all__ = ["make_flash_viterbi_2d", "make_batched_flash_decoder"]
+__all__ = ["make_flash_viterbi_2d", "make_batched_flash_decoder",
+           "BATCHED_DECODER_METHODS"]

@@ -55,12 +55,13 @@ def run(multi_pod: bool, json_path: str | None = None, shard: str = "row"):
               f"dominant={row['dominant']} coll={row['coll_detail']}")
         rows.append(row)
 
-        # --- batched serving decoder --------------------------------------
+        # --- batched serving decoder (ragged lengths over the data axis) --
         K2, T2, B2 = 512, 512, 256
-        bdec = make_batched_flash_decoder(mesh)
+        bdec = make_batched_flash_decoder(mesh, method="flash")
         args = (jax.ShapeDtypeStruct((K2,), jnp.float32),
                 jax.ShapeDtypeStruct((K2, K2), jnp.float32),
-                jax.ShapeDtypeStruct((B2, T2, K2), jnp.float32))
+                jax.ShapeDtypeStruct((B2, T2, K2), jnp.float32),
+                jax.ShapeDtypeStruct((B2,), jnp.int32))
         t0 = time.time()
         compiled = bdec.lower(*args).compile()
         dt = time.time() - t0

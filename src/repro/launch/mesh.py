@@ -5,29 +5,30 @@ Multi-pod:  2 x 16 x 16 = 512 chips, axes (pod, data, model) — the pod axis
 carries only data parallelism / ZeRO reduce-scatter (DCI-friendly); no TP
 collective crosses pods.
 
+Meshes are built through `runtime.jaxcompat.make_mesh`, which passes
+``AxisType.Auto`` only on jax versions that have it — this module must import
+and run on the pinned 0.4.x toolchain as well as current jax.
+
 Functions, not module-level constants: importing this module never touches
 jax device state (the dry-run sets XLA_FLAGS before any jax import).
 """
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.runtime.jaxcompat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(*, multi_pod: bool = False):
     """Small-device-count analogue for CI (8 fake devices)."""
     shape = (2, 2, 2) if multi_pod else (4, 2)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def data_axis_size(mesh) -> int:

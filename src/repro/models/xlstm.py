@@ -24,6 +24,12 @@ import jax.numpy as jnp
 
 from .common import Layout, rms_norm
 
+# Floor for the exponential-gating stabiliser m: the normaliser is
+# max(|n|, exp(-m)), so m below ~-88 overflows exp(-m) to f32 inf and the
+# backward pass hits 0*inf = nan.  Every value the floor touches is already
+# ~exp(-80) in the output, so clamping is invisible at f32 precision.
+_M_FLOOR = -80.0
+
 
 @dataclasses.dataclass(frozen=True)
 class XLSTMConfig:
@@ -73,7 +79,7 @@ def mlstm_parallel(q, k, v, log_i, log_f):
     lg = lm + log_i[:, None, :, :]                        # + log i_s
     tri = jnp.tril(jnp.ones((S, S), bool))
     lg = jnp.where(tri[None, :, :, None], lg, -jnp.inf)
-    m = jnp.max(lg, axis=2, keepdims=True)                # row-stabiliser
+    m = jnp.maximum(jnp.max(lg, axis=2, keepdims=True), _M_FLOOR)
     dmat = jnp.exp(lg - m)                                # (B, T, S, H)
     s = jnp.einsum("bthd,bshd->btsh", q.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(hd)
@@ -101,7 +107,7 @@ def mlstm_chunked(q, k, v, log_i, log_f, chunk: int = 256):
         tpos = t0 + jnp.arange(chunk)
         mask = tpos[:, None] >= jnp.arange(S)[None, :]
         lg = jnp.where(mask[None, :, :, None], lg, -jnp.inf)
-        m = jnp.max(lg, axis=2, keepdims=True)
+        m = jnp.maximum(jnp.max(lg, axis=2, keepdims=True), _M_FLOOR)
         dmat = jnp.exp(lg - m)
         s = jnp.einsum("bthd,bshd->btsh", qt.astype(jnp.float32),
                        k.astype(jnp.float32)) / math.sqrt(hd)
@@ -120,7 +126,7 @@ def mlstm_step(q, k, v, log_i, log_f, state):
     B, S, H, hd = q.shape  # S == 1
     qt, kt, vt = (x[:, 0].astype(jnp.float32) for x in (q, k, v))
     li, lf = log_i[:, 0], log_f[:, 0]                     # (B, H)
-    m_new = jnp.maximum(lf + state["m"], li)
+    m_new = jnp.maximum(jnp.maximum(lf + state["m"], li), _M_FLOOR)
     fi = jnp.exp(lf + state["m"] - m_new)[..., None]
     ii = jnp.exp(li - m_new)[..., None]
     kv = kt[..., :, None] * vt[..., None, :] / math.sqrt(hd)  # (B,H,hd,hd)

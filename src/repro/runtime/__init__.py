@@ -1,1 +1,3 @@
-"""repro.runtime"""
+"""repro.runtime — fault tolerance (`fault`, stdlib-only) + jax
+version-compat shims (`jaxcompat`, imported explicitly so pure-Python
+supervisor processes never pay the jax import)."""

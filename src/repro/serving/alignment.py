@@ -30,7 +30,8 @@ class AlignmentConfig:
     chunk: int = 128
 
 
-def make_alignment_head(hmm_log_pi, hmm_log_A, cfg: AlignmentConfig):
+def make_alignment_head(hmm_log_pi, hmm_log_A, cfg: AlignmentConfig, *,
+                        mesh=None, data_axis: str = "data"):
     """Returns align(emissions (B, T, K), lengths=None) -> (paths, scores).
 
     `lengths` (B,) gives each request's true frame count; pad frames run as
@@ -38,6 +39,11 @@ def make_alignment_head(hmm_log_pi, hmm_log_A, cfg: AlignmentConfig):
     bit-identical to unbatched decodes of the unpadded payloads (for exact
     methods; FLASH-BS keeps its beam approximation but no pad corruption).
     This is the `decode_batch_fn` contract `BatchScheduler` expects.
+
+    With ``mesh=`` the request bucket shards over ``data_axis``
+    (`viterbi_decode_batch`'s multi-device path).  Buckets whose size does
+    not divide the axis are padded up with length-1 dummy rows and sliced
+    back — per-request results are unaffected (vmap lanes never interact).
     """
 
     @jax.jit
@@ -45,13 +51,24 @@ def make_alignment_head(hmm_log_pi, hmm_log_A, cfg: AlignmentConfig):
         return viterbi_decode_batch(em, hmm_log_pi, hmm_log_A, lengths,
                                     method=cfg.method,
                                     parallelism=cfg.parallelism, lanes=None,
-                                    beam_width=cfg.beam_width, chunk=cfg.chunk)
+                                    beam_width=cfg.beam_width, chunk=cfg.chunk,
+                                    mesh=mesh, data_axis=data_axis)
 
     def align(em, lengths=None):
         em = jnp.asarray(em)
+        B = em.shape[0]
         if lengths is None:
-            lengths = jnp.full((em.shape[0],), em.shape[1], jnp.int32)
-        return _align(em, jnp.asarray(lengths, jnp.int32))
+            lengths = jnp.full((B,), em.shape[1], jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        if mesh is not None:
+            pad_b = -B % mesh.shape[data_axis]
+            if pad_b:
+                em = jnp.concatenate(
+                    [em, jnp.zeros((pad_b,) + em.shape[1:], em.dtype)])
+                lengths = jnp.concatenate(
+                    [lengths, jnp.ones((pad_b,), jnp.int32)])
+        paths, scores = _align(em, lengths)
+        return paths[:B], scores[:B]
 
     return align
 

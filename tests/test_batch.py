@@ -91,6 +91,33 @@ def test_batch_unknown_method_raises(batch_problem):
         viterbi_decode_batch(em, hmm.log_pi, hmm.log_A, method="nope")
 
 
+@pytest.mark.parametrize("bad", [[0, 17, 33, 1, 5], [1, TMAX + 1, 3, 4, 5],
+                                 [-2, 1, 1, 1, 1]])
+def test_batch_lengths_out_of_range_raise(batch_problem, bad):
+    """No silent clipping: concrete lengths outside [1, T] raise eagerly
+    instead of decoding the wrong frame span."""
+    hmm, em = batch_problem
+    with pytest.raises(ValueError, match="lengths must lie"):
+        viterbi_decode_batch(em, hmm.log_pi, hmm.log_A,
+                             np.asarray(bad, np.int32), method="vanilla")
+
+
+def test_batch_traced_lengths_still_jit(batch_problem):
+    """Valid lengths under jit (tracers) pass through the validation."""
+    hmm, em = batch_problem
+
+    @jax.jit
+    def f(e, ln):
+        return viterbi_decode_batch(e, hmm.log_pi, hmm.log_A, ln,
+                                    method="vanilla")
+
+    p0, s0 = viterbi_decode_batch(em, hmm.log_pi, hmm.log_A, LENGTHS,
+                                  method="vanilla")
+    p1, s1 = f(em, jnp.asarray(LENGTHS))
+    assert np.array_equal(np.asarray(p0), np.asarray(p1))
+    assert np.array_equal(np.asarray(s0), np.asarray(s1))
+
+
 def test_batch_pad_frames_do_not_leak(batch_problem):
     """Garbage in the pad frames must not change any result (the scheduler
     zero-pads, but the contract is 'anything')."""

@@ -1,5 +1,10 @@
 """Distributed tests (8 fake devices, run in a subprocess so the forced device
-count never leaks into other tests' jax runtime)."""
+count never leaks into other tests' jax runtime).
+
+Everything here must collect and pass on the pinned jax 0.4.x toolchain AND
+current jax — mesh construction and every shard_map goes through
+`repro.runtime.jaxcompat`.  CI runs this file in a dedicated step with
+``--xla_force_host_platform_device_count=8`` (``make test-dist``)."""
 
 import json
 import os
@@ -15,10 +20,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import json
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import erdos_renyi_hmm, random_emissions
+from repro.core import (erdos_renyi_hmm, random_emissions, viterbi_decode,
+                        viterbi_decode_batch)
 from repro.core import reference as ref
 from repro.core.distributed import make_flash_viterbi_2d, make_batched_flash_decoder
-from repro.launch.mesh import make_test_mesh
+from repro.launch.mesh import make_test_mesh, data_axis_size
 from repro.launch.steps import build_cell, lower_cell
 from repro.configs import get_arch
 from repro.sharding.rules import SINGLE_POD_RULES
@@ -26,25 +32,74 @@ from repro.train import TrainConfig, init_train_state, make_train_step, train_st
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 out = {}
-mesh = make_test_mesh()   # (4, 2) data x model
 
-# 1. 2-D sharded FLASH viterbi is exact
+# 0. mesh construction through the compat shim on stock jax (this was the
+#    import-time regression: jax.sharding.AxisType does not exist on 0.4.x)
+mesh = make_test_mesh()   # (4, 2) data x model
+out["mesh_import_and_build"] = (len(mesh.devices.ravel()) == 8 and
+                                data_axis_size(mesh) == 4)
+mesh_mp = make_test_mesh(multi_pod=True)
+out["mesh_multipod_build"] = dict(mesh_mp.shape) == {"pod": 2, "data": 2,
+                                                     "model": 2}
+
+# 1. 2-D sharded FLASH viterbi is exact in both model-axis layouts, and the
+#    row/col layouts agree with each other
 K, T = 64, 96
 k1, k2 = jax.random.split(jax.random.key(3))
 hmm = erdos_renyi_hmm(k1, K, edge_prob=0.4)
 em = random_emissions(k2, T, K)
-dec = make_flash_viterbi_2d(mesh, T, K)
-path, score = dec(hmm.log_pi, hmm.log_A, em)
 npath, nscore = ref.viterbi_numpy(np.asarray(hmm.log_pi), np.asarray(hmm.log_A), np.asarray(em))
-out["viterbi_2d_exact"] = bool(np.array_equal(np.asarray(path), npath)) and \
-    abs(float(score) - nscore) < 1e-3 * abs(nscore)
+paths2d = {}
+for shard in ("row", "col"):
+    dec = make_flash_viterbi_2d(mesh, T, K, shard=shard)
+    path, score = dec(hmm.log_pi, hmm.log_A, em)
+    paths2d[shard] = np.asarray(path)
+    out[f"viterbi_2d_{shard}_exact"] = bool(np.array_equal(np.asarray(path), npath)) and \
+        abs(float(score) - nscore) < 1e-3 * abs(nscore)
+out["viterbi_2d_row_col_agree"] = bool(np.array_equal(paths2d["row"], paths2d["col"]))
 
-# 2. batched decoder shards over data and is exact per sequence
-bdec = make_batched_flash_decoder(mesh)
-paths, scores = bdec(hmm.log_pi, hmm.log_A, jnp.stack([em] * 8))
-out["viterbi_batched_exact"] = bool(np.allclose(np.asarray(scores), nscore, rtol=1e-5))
+# 2. sharded ragged batched decode is bit-identical to looped unbatched
+#    decodes, for every serving method
+B, TMAX = 8, 40
+lengths = np.array([TMAX, 17, 1, 33, TMAX, 9, 25, 2], np.int32)
+emb = random_emissions(jax.random.key(7), B * TMAX, K).reshape(B, TMAX, K)
+for method in ("vanilla", "flash", "fused"):
+    bdec = make_batched_flash_decoder(mesh, method=method)
+    paths, scores = bdec(hmm.log_pi, hmm.log_A, emb, jnp.asarray(lengths))
+    ok = True
+    for i, L in enumerate(lengths):
+        p, s = viterbi_decode(emb[i, :int(L)], hmm.log_pi, hmm.log_A,
+                              method="vanilla")
+        ok = ok and bool(np.array_equal(np.asarray(paths[i, :int(L)]),
+                                        np.asarray(p)))
+        ok = ok and bool(np.isclose(float(scores[i]), float(s), rtol=1e-6))
+    out[f"batched_{method}_ragged_bit_identical"] = ok
 
-# 3. smoke train step actually runs SPMD on the test mesh (not just lowers)
+# 3. viterbi_decode_batch(mesh=...) is bit-identical to the single-device call
+ps, ss = viterbi_decode_batch(emb, hmm.log_pi, hmm.log_A, jnp.asarray(lengths),
+                              method="flash", mesh=mesh)
+p0, s0 = viterbi_decode_batch(emb, hmm.log_pi, hmm.log_A, jnp.asarray(lengths),
+                              method="flash")
+out["sharded_batch_bit_identical"] = bool(np.array_equal(np.asarray(ps), np.asarray(p0))) \
+    and bool(np.array_equal(np.asarray(ss), np.asarray(s0)))
+
+# 4. serving alignment head shards a non-divisible bucket (pads with dummies)
+from repro.serving.alignment import AlignmentConfig, make_alignment_head
+head = make_alignment_head(hmm.log_pi, hmm.log_A,
+                           AlignmentConfig(method="flash"), mesh=mesh)
+ems5 = emb[:5]
+lens5 = jnp.asarray(lengths[:5])
+hp, hs = head(ems5, lens5)
+ok = hp.shape == (5, TMAX) and hs.shape == (5,)
+for i in range(5):
+    L = int(lengths[i])
+    p, s = viterbi_decode(emb[i, :L], hmm.log_pi, hmm.log_A, method="flash",
+                          lanes=None)
+    ok = ok and bool(np.array_equal(np.asarray(hp[i, :L]), np.asarray(p)))
+    ok = ok and bool(np.isclose(float(hs[i]), float(s), rtol=1e-6))
+out["alignment_head_sharded_exact"] = ok
+
+# 5. smoke train step actually runs SPMD on the test mesh (not just lowers)
 cfg = get_arch("tinyllama_1_1b").SMOKE
 from repro.models import build_model
 model = build_model(cfg)
@@ -70,7 +125,7 @@ with mesh:
     out["spmd_train_losses_finite"] = all(np.isfinite(l) for l in losses)
     out["spmd_train_loss_decreases"] = losses[-1] < losses[0]
 
-# 4. dry-run cell lowers+compiles on the 8-device mesh for a non-trivial arch
+# 6. dry-run cell lowers+compiles on the 8-device mesh for a non-trivial arch
 with mesh:
     cell = build_cell(get_arch("gemma_2b"), "decode_32k", mesh)
     compiled = lower_cell(cell).compile()
@@ -90,12 +145,34 @@ def results():
     return json.loads(line[len("RESULT "):])
 
 
+def test_mesh_builds_on_stock_jax(results):
+    """Regression: launch/mesh.py imports + builds meshes on jax 0.4.x."""
+    assert results["mesh_import_and_build"]
+    assert results["mesh_multipod_build"]
+
+
 def test_viterbi_2d_exact(results):
-    assert results["viterbi_2d_exact"]
+    assert results["viterbi_2d_row_exact"]
+    assert results["viterbi_2d_col_exact"]
 
 
-def test_viterbi_batched_exact(results):
-    assert results["viterbi_batched_exact"]
+def test_viterbi_2d_row_col_agree(results):
+    assert results["viterbi_2d_row_col_agree"]
+
+
+@pytest.mark.parametrize("method", ["vanilla", "flash", "fused"])
+def test_batched_ragged_bit_identical(results, method):
+    """Sharded ragged batch == looped unbatched decodes, bit for bit."""
+    assert results[f"batched_{method}_ragged_bit_identical"]
+
+
+def test_sharded_batch_matches_single_device(results):
+    """viterbi_decode_batch(mesh=...) == viterbi_decode_batch() exactly."""
+    assert results["sharded_batch_bit_identical"]
+
+
+def test_alignment_head_sharded(results):
+    assert results["alignment_head_sharded_exact"]
 
 
 def test_spmd_train_step_runs_and_learns(results):

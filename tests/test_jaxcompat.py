@@ -1,0 +1,69 @@
+"""Unit tests for `repro.runtime.jaxcompat` — these run on a single device
+and on any supported jax version; the probes themselves are the contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, Mesh, PartitionSpec as P
+
+from repro.runtime import jaxcompat as jc
+
+
+def test_probes_are_booleans():
+    for flag in (jc.HAS_CHECK_VMA, jc.HAS_AXIS_TYPE,
+                 jc.HAS_MAKE_MESH_AXIS_TYPES, jc.ABSTRACT_MESH_TAKES_PAIRS):
+        assert isinstance(flag, bool)
+
+
+def test_probes_consistent_with_installed_jax():
+    # the kwarg rename and jax.shard_map promotion happened together with the
+    # AxisType introduction; on 0.4.x all three must be absent
+    if jc.jax_version() < (0, 5, 0):
+        assert not jc.HAS_AXIS_TYPE
+        assert not jc.HAS_MAKE_MESH_AXIS_TYPES
+        assert jc.ABSTRACT_MESH_TAKES_PAIRS
+    assert jc.HAS_AXIS_TYPE == hasattr(jax.sharding, "AxisType")
+
+
+def test_jax_version_tuple():
+    v = jc.jax_version()
+    assert isinstance(v, tuple) and len(v) == 3
+    assert all(isinstance(p, int) for p in v)
+    assert v >= (0, 4, 0)
+
+
+def test_make_mesh_single_device():
+    mesh = jc.make_mesh((1,), ("x",))
+    assert isinstance(mesh, Mesh)
+    assert dict(mesh.shape) == {"x": 1}
+
+
+def test_shard_map_runs_on_single_device_mesh():
+    mesh = jc.make_mesh((1,), ("x",))
+    f = jc.shard_map(lambda a: a * 2, mesh=mesh, in_specs=(P("x"),),
+                     out_specs=P("x"))
+    np.testing.assert_array_equal(np.asarray(f(jnp.arange(4.0))),
+                                  [0.0, 2.0, 4.0, 6.0])
+
+
+def test_shard_map_check_replication_kwarg():
+    """Both values of the portable kwarg map onto the installed jax."""
+    mesh = jc.make_mesh((1,), ("x",))
+    x = jnp.ones((2,))
+    for check in (False, True):
+        f = jc.shard_map(lambda a: a + 1, mesh=mesh, in_specs=(P("x"),),
+                         out_specs=P("x"), check_replication=check)
+        np.testing.assert_array_equal(np.asarray(f(x)), [2.0, 2.0])
+
+
+def test_abstract_mesh_bridge():
+    m = jc.abstract_mesh((2, 4), ("data", "model"))
+    assert isinstance(m, AbstractMesh)
+    assert dict(m.shape) == {"data": 2, "model": 4}
+    assert m.shape["data"] == 2 and m.shape["model"] == 4
+
+
+def test_abstract_mesh_mismatched_args_raise():
+    with pytest.raises(ValueError):
+        jc.abstract_mesh((2, 2), ("data",))

@@ -13,7 +13,7 @@ from repro.optim import (AdamWConfig, init_state, update, schedule,
                          zero1_specs, quantize, dequantize, ef_accumulate,
                          init_ef_state)
 from repro.checkpointing.manager import CheckpointManager
-from repro.checkpointing.elastic import plan_rescale
+from repro.checkpointing.elastic import plan_rescale, abstract_target_mesh
 from repro.runtime.fault import (HeartbeatMonitor, StragglerDetector,
                                  SupervisedLoop)
 from repro.data.pipeline import SyntheticTokenPipeline, TokenPipelineConfig
@@ -126,9 +126,10 @@ def test_heartbeat_and_straggler():
 
 
 def test_elastic_plan_rescale():
-    import jax
-    # AbstractMesh: plan_rescale only reads shapes (1-device test host)
-    mesh_ok = jax.sharding.AbstractMesh((2, 2), ("data", "model"))
+    # abstract target mesh: plan_rescale only reads shapes (1-device test
+    # host); constructed through the jaxcompat shim — AbstractMesh's
+    # signature differs between jax 0.4.x and current jax
+    mesh_ok = abstract_target_mesh((2, 2), ("data", "model"))
     shapes = {"w": jax.ShapeDtypeStruct((64, 128), jnp.float32)}
     specs = {"w": P("data", "model")}
     assert plan_rescale(shapes, specs, mesh_ok) == []
