@@ -4,7 +4,7 @@
 PY ?= python
 
 .PHONY: test test-fast test-dist bench bench-smoke example-quickstart \
-	example-streaming example-batch
+	example-streaming example-batch example-adaptive serve-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -26,10 +26,16 @@ bench-smoke:  # ~30 s benchmark smoke used by CI (kernel model + batched decode)
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run --quick
 
 example-quickstart:
-	$(PY) examples/quickstart.py
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) examples/quickstart.py
 
 example-streaming:
-	$(PY) examples/streaming_decode.py
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) examples/streaming_decode.py
 
 example-batch:
-	$(PY) examples/batch_decode.py
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) examples/batch_decode.py
+
+example-adaptive:  # planner smoke: budget -> spec -> decode (CI runs this)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) examples/adaptive_edge.py --budget-kb 8
+
+serve-smoke:  # budget-driven serving path end-to-end (CI runs this)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve --budget-kb 64 --requests 4

@@ -2,9 +2,11 @@
 
 Wall-clock rows compare the interpreted numpy implementations (the paper's
 "Py" column analogue) against the jitted XLA ones (the "C" column analogue) on
-this host.  Memory rows are *live decoder-state bytes* from the documented
-analytic formulas — the quantity the paper's Fig. 1/7/9 track — because RSS on
-a JIT runtime measures the allocator, not the algorithm.
+this host.  Memory rows are *live decoder-state bytes* — the quantity the
+paper's Fig. 1/7/9 track — because RSS on a JIT runtime measures the
+allocator, not the algorithm.  The analytic formulas live in
+`repro.core.planner` (the planner's cost model is the single source of
+truth); `decoder_state_bytes` is re-exported here for the benchmark suites.
 """
 
 from __future__ import annotations
@@ -13,6 +15,8 @@ import time
 
 import numpy as np
 import jax
+
+from repro.core.planner import decoder_state_bytes
 
 
 def timeit(fn, *args, repeats: int = 3, warmup: int = 1) -> float:
@@ -36,33 +40,6 @@ def timeit_np(fn, *args, repeats: int = 1) -> float:
         fn(*args)
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
-
-
-def decoder_state_bytes(method: str, K: int, T: int, P: int = 8,
-                        B: int = 128) -> int:
-    """Live DP-state bytes per the complexity table (paper Fig. 1).
-
-    4-byte scores + 4-byte indices; FLASH tracks (OptProb, PreState-equivalent,
-    MidState/DivState); beams track (score, state, mid) per slot.
-    """
-    if method == "vanilla":
-        return K * T * 4 + K * 8                 # psi table + delta
-    if method == "checkpoint":
-        c = int(np.ceil(np.sqrt(T)))
-        return K * c * 4 + K * c * 4 + K * 8     # checkpoints + segment psis
-    if method in ("sieve", "sieve_mp"):
-        return K * 12                            # delta + mid + entry vector
-    if method == "flash":
-        return P * K * 12 + (P - 1) * K * 4      # P lanes + DivState
-    if method == "flash_bs":
-        return P * B * 12 + (P - 1) * B * 4
-    if method == "beam_static":
-        return K * 4 + T * B * 8                 # full-K transient + survivors
-    if method == "beam_static_mp":
-        return K * 4 + P * B * 12                # full-K transient per step
-    if method == "assoc":
-        return T * K * K * 4
-    raise ValueError(method)
 
 
 def emit(name: str, seconds: float, derived: str = ""):

@@ -1,42 +1,23 @@
 """The paper's adaptivity story as an executable policy (Fig. 1).
 
-Given a device memory budget and a latency target, pick (method, P, B) for a
-decoding workload, then run it.  This is the "resource-adaptive operator"
-contribution: one binary, tuned by two integers, covering the whole
-time-space trade-off curve.
+Given a device memory budget, `repro.core.planner.plan` picks the decode spec
+— the paper's Sec. V-C-3 degradation ladder: exact+parallel, then shrink P,
+then the dynamic beam, then the floor — and a `ViterbiDecoder` runs it.  This
+is the "resource-adaptive operator" contribution: one binary, tuned by two
+integers, covering the whole time-space trade-off curve.
 
     PYTHONPATH=src python examples/adaptive_edge.py --budget-kb 64
     PYTHONPATH=src python examples/adaptive_edge.py --budget-kb 8 --seq 2048
 """
-
-import sys
-import os
-_here = os.path.dirname(os.path.abspath(__file__))
-sys.path.insert(0, os.path.join(_here, "..", "src"))
-sys.path.insert(0, os.path.join(_here, ".."))
 
 import argparse
 import time
 
 import jax
 
-from repro.core import erdos_renyi_hmm, random_emissions, viterbi_decode, \
-    path_score, relative_error
-from benchmarks.common import decoder_state_bytes
-
-
-def choose_config(K: int, T: int, budget_bytes: int):
-    """Paper Sec. V-C-3: prefer exact+parallel; degrade P, then beam width."""
-    for P in (16, 8, 4, 2, 1):
-        if decoder_state_bytes("flash", K, T, P=P) <= budget_bytes:
-            return ("flash", {"parallelism": P}), f"exact, P={P}"
-    for B in (256, 128, 64, 32):
-        for P in (8, 4, 1):
-            if decoder_state_bytes("flash_bs", K, T, P=P, B=B) <= budget_bytes:
-                return ("flash_bs", {"parallelism": P, "beam_width": B}), \
-                    f"beam, P={P}, B={B}"
-    return ("flash_bs", {"parallelism": 1, "beam_width": 16}), "floor: P=1,B=16"
-
+from repro.core import (erdos_renyi_hmm, random_emissions, path_score,
+                        relative_error, plan, ResourceBudget, ViterbiDecoder,
+                        VanillaSpec, spec_state_bytes)
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--budget-kb", type=float, default=64)
@@ -45,25 +26,27 @@ ap.add_argument("--seq", type=int, default=512)
 args = ap.parse_args()
 
 K, T = args.states, args.seq
-budget = int(args.budget_kb * 1024)
-(method, kw), why = choose_config(K, T, budget)
-print(f"budget={args.budget_kb:.0f}KiB K={K} T={T} -> {method} {kw}  ({why})")
+budget = ResourceBudget(memory_bytes=int(args.budget_kb * 1024))
+decode_plan = plan(K, T, budget)
+print(f"budget={args.budget_kb:.0f}KiB K={K} T={T} -> {decode_plan.spec}")
+print(f"  why: {decode_plan.why}")
 
 key = jax.random.key(0)
 k1, k2 = jax.random.split(key)
 hmm = erdos_renyi_hmm(k1, K)
 em = random_emissions(k2, T, K)
 
-path, score = viterbi_decode(em, hmm.log_pi, hmm.log_A, method=method, **kw)
+dec = ViterbiDecoder(decode_plan.spec, hmm.log_pi, hmm.log_A)
+path, score = dec.decode(em)
 jax.block_until_ready(path)
 t0 = time.perf_counter()
-path, score = viterbi_decode(em, hmm.log_pi, hmm.log_A, method=method, **kw)
+path, score = dec.decode(em)
 jax.block_until_ready(path)
 dt = (time.perf_counter() - t0) * 1e3
 
-_, opt = viterbi_decode(em, hmm.log_pi, hmm.log_A, method="vanilla")
+_, opt = ViterbiDecoder(VanillaSpec(), hmm.log_pi, hmm.log_A).decode(em)
 ll = path_score(hmm.log_pi, hmm.log_A, em, path)
-state = decoder_state_bytes(method, K, T, P=kw.get("parallelism", 8),
-                            B=kw.get("beam_width", 128))
+state = spec_state_bytes(decode_plan.spec, K, T)
 print(f"decoded in {dt:.1f}ms, state={state:,}B "
-      f"(budget {budget:,}B), rel.err={float(relative_error(opt, ll)):.2e}")
+      f"(budget {budget.memory_bytes:,}B), "
+      f"rel.err={float(relative_error(opt, ll)):.2e}")

@@ -13,11 +13,6 @@ lengths, and decodes them three ways:
      `lengths` so results stay exact.
 """
 
-import sys
-import os
-_here = os.path.dirname(os.path.abspath(__file__))
-sys.path.insert(0, os.path.join(_here, "..", "src"))
-
 import time
 
 import numpy as np
@@ -25,8 +20,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (erdos_renyi_hmm, random_emissions, viterbi_decode,
-                        viterbi_decode_batch)
-from repro.serving.alignment import AlignmentConfig, make_alignment_head
+                        viterbi_decode_batch, FusedSpec)
+from repro.serving.alignment import make_alignment_head
 from repro.serving.scheduler import BatchScheduler
 
 K, TMAX, B = 128, 96, 8
@@ -74,7 +69,7 @@ print(f"batched launch: {t_batch * 1e3:.2f} ms   "
       f"on first contact, which buckets avoid entirely)\n")
 
 # 3. the serving path: scheduler buckets + pads, decoder masks the pads
-head = make_alignment_head(hmm.log_pi, hmm.log_A, AlignmentConfig(method="fused"))
+head = make_alignment_head(hmm.log_pi, hmm.log_A, FusedSpec())
 sched = BatchScheduler(head, max_batch=B, buckets=(TMAX,))
 reqs = [sched.submit(np.asarray(em[i, :int(L)])) for i, L in enumerate(lengths)]
 done = sched.drain()

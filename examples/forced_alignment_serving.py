@@ -4,11 +4,6 @@ forced-alignment requests against a hubert-style encoder + FLASH-BS head.
     PYTHONPATH=src python examples/forced_alignment_serving.py
 """
 
-import sys
-import os
-_here = os.path.dirname(os.path.abspath(__file__))
-sys.path.insert(0, os.path.join(_here, "..", "src"))
-
 import time
 
 import numpy as np
@@ -18,7 +13,6 @@ import jax.numpy as jnp
 from repro.configs import get_arch
 from repro.models import build_model
 from repro.core import left_to_right_hmm, viterbi_vanilla, relative_error
-from repro.serving.alignment import AlignmentConfig
 from repro.serving.scheduler import BatchScheduler
 
 # 1. encoder (reduced hubert on CPU; the full config runs on the pod)

@@ -3,25 +3,20 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a random Erdos-Renyi HMM (the paper's synthetic workload), decodes one
-observation sequence with every method in the family, and shows the paper's
-adaptivity story: the same operator tuned for latency (high P), memory
-(P=1 / narrow beam), or exactness.
+observation sequence with every method in the family via typed specs and one
+`ViterbiDecoder` per spec, and shows the paper's adaptivity story: the same
+operator tuned for latency (high P), memory (P=1 / narrow beam), or
+exactness — including letting the planner pick the spec from a byte budget.
 """
-
-import sys
-import os
-_here = os.path.dirname(os.path.abspath(__file__))
-sys.path.insert(0, os.path.join(_here, "..", "src"))
-sys.path.insert(0, os.path.join(_here, ".."))
 
 import time
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import (erdos_renyi_hmm, sample_observations, viterbi_decode,
-                        viterbi_decode_hmm, path_score, relative_error)
-from benchmarks.common import decoder_state_bytes
+from repro.core import (erdos_renyi_hmm, sample_observations, path_score,
+                        relative_error, spec_state_bytes, ViterbiDecoder,
+                        VanillaSpec, CheckpointSpec, FlashSpec, FlashBSSpec,
+                        BeamStaticSpec, plan, ResourceBudget)
 
 K, T = 512, 512  # the paper's default setting (Sec. VII-A)
 
@@ -32,37 +27,43 @@ states, obs = sample_observations(k_obs, hmm, T)
 em = hmm.emissions(obs)
 
 print(f"HMM: K={K} states, T={T} steps, p=0.253 (paper defaults)\n")
-print(f"{'method':24s} {'time(ms)':>9s} {'state bytes':>12s} "
+print(f"{'spec':34s} {'time(ms)':>9s} {'state bytes':>12s} "
       f"{'score':>12s} {'rel.err':>9s}")
 
-_, opt_score = viterbi_decode(em, hmm.log_pi, hmm.log_A, method="vanilla")
+_, opt_score = ViterbiDecoder(VanillaSpec(), hmm.log_pi, hmm.log_A).decode(em)
 
-for method, kw, mem_kw in [
-    ("vanilla", {}, {}),
-    ("checkpoint", {}, {}),
-    ("flash", {"parallelism": 1}, {"P": 1}),
-    ("flash", {"parallelism": 7}, {"P": 7}),
-    ("flash", {"parallelism": 16}, {"P": 16}),
-    ("flash_bs", {"parallelism": 7, "beam_width": 128}, {"P": 7, "B": 128}),
-    ("flash_bs", {"parallelism": 7, "beam_width": 32}, {"P": 7, "B": 32}),
-    ("beam_static", {"beam_width": 128}, {"B": 128}),
+for spec in [
+    VanillaSpec(),
+    CheckpointSpec(),
+    FlashSpec(parallelism=1),
+    FlashSpec(parallelism=7),
+    FlashSpec(parallelism=16),
+    FlashBSSpec(parallelism=7, beam_width=128),
+    FlashBSSpec(parallelism=7, beam_width=32),
+    BeamStaticSpec(beam_width=128),
 ]:
-    fn = lambda: viterbi_decode(em, hmm.log_pi, hmm.log_A, method=method, **kw)
-    path, score = fn()
+    dec = ViterbiDecoder(spec, hmm.log_pi, hmm.log_A)
+    path, score = dec.decode(em)
     jax.block_until_ready(path)
     t0 = time.perf_counter()
-    path, score = fn()
+    path, score = dec.decode(em)
     jax.block_until_ready(path)
     dt = (time.perf_counter() - t0) * 1e3
     ll = path_score(hmm.log_pi, hmm.log_A, em, path)
     err = float(relative_error(opt_score, ll))
-    name = method + (f"(P={kw.get('parallelism')})" if "parallelism" in kw else "") \
-        + (f"(B={kw['beam_width']})" if "beam_width" in kw else "")
-    mem = decoder_state_bytes(
-        {"beam_static": "beam_static"}.get(method, method), K, T, **mem_kw)
-    print(f"{name:24s} {dt:9.2f} {mem:12,d} {float(score):12.2f} {err:9.2e}")
+    fields = ", ".join(f"{k[0].upper()}={v}" for k, v in (
+        ("parallelism", getattr(spec, "parallelism", None)),
+        ("beam_width", getattr(spec, "beam_width", None))) if v is not None)
+    name = type(spec).__name__ + (f"({fields})" if fields else "()")
+    mem = spec_state_bytes(spec, K, T)
+    print(f"{name:34s} {dt:9.2f} {mem:12,d} {float(score):12.2f} {err:9.2e}")
 
 print("\nSame operator, three deployment profiles (the paper's Fig. 1):")
-print("  latency-optimal : flash     P=16           (time/P, memory O(PK))")
-print("  memory-optimal  : flash_bs  P=1,  B=32     (memory O(B), decoupled from K)")
-print("  exact           : flash     P=7            (optimal path, O(PK))")
+print("  latency-optimal : FlashSpec(parallelism=16)      (time/P, memory O(PK))")
+print("  memory-optimal  : FlashBSSpec(P=1, beam_width=32) (memory O(B), decoupled from K)")
+print("  exact           : FlashSpec(parallelism=7)        (optimal path, O(PK))")
+
+print("\nOr let the planner pick from a budget (Sec. V-C-3 ladder):")
+for kb in (512, 64, 4):
+    p = plan(K, T, ResourceBudget(memory_bytes=kb * 1024))
+    print(f"  {kb:4d} KiB -> {p.why}")

@@ -9,11 +9,6 @@ second half shows the serving shape: a StreamMux carrying two concurrent
 sessions with different latency/memory profiles (exact vs narrow beam).
 """
 
-import sys
-import os
-_here = os.path.dirname(os.path.abspath(__file__))
-sys.path.insert(0, os.path.join(_here, "..", "src"))
-
 import numpy as np
 import jax
 

@@ -8,11 +8,6 @@ resume, loss goes down.  (The 100M configuration is the same code path; on
 this 1-core container it is hours, so the default is a reduced model.)
 """
 
-import sys
-import os
-_here = os.path.dirname(os.path.abspath(__file__))
-sys.path.insert(0, os.path.join(_here, "..", "src"))
-
 import argparse
 
 from repro.launch.train import main as train_main

@@ -1,16 +1,31 @@
 """Unified Viterbi operator — the public entry point used by serving, examples
 and benchmarks.
 
+The typed API (preferred):
+
+    from repro.core import FlashSpec, ViterbiDecoder, plan, ResourceBudget
+
+    spec = FlashSpec(parallelism=8)                      # typed + validated
+    spec = plan(K, T, ResourceBudget(memory_bytes=64 << 10)).spec  # or planned
+    dec = ViterbiDecoder(spec, log_pi, log_A)            # jit-cached per spec
+    path, score = dec.decode(emissions)                  # (T, K)
+    paths, scores = dec.decode_batch(ems, lengths=ln)    # ragged (B, T, K)
+    paths, scores = dec.decode_sharded(ems, mesh=mesh)   # mesh data-parallel
+
+Specs (`core/spec.py`) are frozen, hashable per-method dataclasses with eager
+validation — nonsense like ``beam_width=0`` raises at construction, and a
+tunable the method does not consume cannot even be expressed.  The planner
+(`core/planner.py`) turns a `ResourceBudget` into a spec via the paper's
+Sec. V-C-3 degradation ladder (exact+parallel -> shrink P -> beam -> floor).
+
+The legacy string+kwargs form is kept as a thin shim over the same specs:
+
     path, score = viterbi_decode(emissions, log_pi, log_A, method="flash", ...)
 
-`method` selects among the paper's algorithm ("flash", "flash_bs"), the paper's
-baselines ("vanilla", "checkpoint", "beam_static", "beam_static_mp"), the
-beyond-paper associative-scan schedule ("assoc"), the fused Pallas forward
-kernel ("fused"), and the streaming decoders ("online", "online_beam" —
-chunk-fed one-shot; for true incremental use, hold an `OnlineViterbiDecoder` /
-`serving.stream.StreamSession` directly).  Tunables `parallelism`, `lanes`,
-`beam_width` and `chunk` realise the paper's adaptivity story: one operator,
-resource profile chosen per deployment.
+It is pinned bit-identical to the spec path by `tests/test_api.py`.  One
+behavioral change: passing a tunable the method ignores (e.g. ``beam_width``
+with ``method="vanilla"``) now emits a `DeprecationWarning` instead of being
+silently dropped.
 
 Batches go through `viterbi_decode_batch(emissions (B, T, K), log_pi, log_A,
 lengths)` — ragged lengths decode exactly via tropical-identity pad steps; see
@@ -19,24 +34,18 @@ lengths)` — ragged lengths decode exactly via tropical-identity pad steps; see
 
 from __future__ import annotations
 
+import warnings
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from .hmm import HMM
-from .vanilla import viterbi_vanilla
-from .checkpoint_viterbi import viterbi_checkpoint
-from .flash import flash_viterbi
-from .flash_bs import flash_bs_viterbi
-from .beam_static import beam_static_viterbi, beam_static_mp_viterbi
-from .assoc import viterbi_assoc
-from .online import viterbi_online, viterbi_online_beam
+from .spec import spec_from_tunables, SPEC_BY_METHOD
 from .batch import viterbi_decode_batch, BATCH_METHODS
 
-METHODS = ("vanilla", "checkpoint", "flash", "flash_bs",
-           "beam_static", "beam_static_mp", "assoc", "fused",
-           "online", "online_beam")
+METHODS = tuple(SPEC_BY_METHOD)
+
+_UNSET: Any = object()
 
 
 def viterbi_decode(
@@ -45,48 +54,35 @@ def viterbi_decode(
     log_A: jax.Array,
     method: str = "flash",
     *,
-    parallelism: int = 8,
-    lanes: int | None = -1,
-    beam_width: int = 128,
-    chunk: int = 128,
-    seg_len: int | None = None,
-    stream_chunk: int = 64,
-    max_lag: int | None = None,
+    parallelism: int = _UNSET,
+    lanes: int | None = _UNSET,
+    beam_width: int = _UNSET,
+    chunk: int = _UNSET,
+    seg_len: int | None = _UNSET,
+    stream_chunk: int = _UNSET,
+    max_lag: int | None = _UNSET,
+    bt: int = _UNSET,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode the max-likelihood state path of (T, K) emissions.
 
-    Returns (path (T,) int32, score). See module docstring for `method`.
+    Back-compat shim: builds the typed spec for `method` and runs it, so the
+    result is bit-identical to `ViterbiDecoder(spec, log_pi, log_A).decode`.
+    Returns (path (T,) int32, score).  Tunables the method does not consume
+    raise a DeprecationWarning (they used to be silently ignored).
     """
-    if method == "vanilla":
-        return viterbi_vanilla(log_pi, log_A, emissions)
-    if method == "checkpoint":
-        return viterbi_checkpoint(log_pi, log_A, emissions, seg_len=seg_len)
-    if method == "flash":
-        return flash_viterbi(log_pi, log_A, emissions,
-                             parallelism=parallelism, lanes=lanes)
-    if method == "flash_bs":
-        return flash_bs_viterbi(log_pi, log_A, emissions, beam_width=beam_width,
-                                parallelism=parallelism, lanes=lanes, chunk=chunk)
-    if method == "beam_static":
-        return beam_static_viterbi(log_pi, log_A, emissions,
-                                   B=min(beam_width, emissions.shape[1]))
-    if method == "beam_static_mp":
-        return beam_static_mp_viterbi(log_pi, log_A, emissions,
-                                      beam_width=beam_width,
-                                      parallelism=parallelism, lanes=lanes)
-    if method == "assoc":
-        return viterbi_assoc(log_pi, log_A, emissions)
-    if method == "fused":
-        from repro.kernels.ops import viterbi_decode_fused
-        return viterbi_decode_fused(log_pi, log_A, emissions)
-    if method == "online":
-        return viterbi_online(log_pi, log_A, emissions,
-                              chunk_size=stream_chunk, max_lag=max_lag)
-    if method == "online_beam":
-        return viterbi_online_beam(log_pi, log_A, emissions,
-                                   beam_width=beam_width, kchunk=chunk,
-                                   chunk_size=stream_chunk, max_lag=max_lag)
-    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+    passed = {name: value for name, value in (
+        ("parallelism", parallelism), ("lanes", lanes),
+        ("beam_width", beam_width), ("chunk", chunk), ("seg_len", seg_len),
+        ("stream_chunk", stream_chunk), ("max_lag", max_lag), ("bt", bt),
+    ) if value is not _UNSET}
+    spec, ignored = spec_from_tunables(method, passed)
+    if ignored:
+        warnings.warn(
+            f"viterbi_decode(method={method!r}) ignores tunable(s) "
+            f"{', '.join(sorted(ignored))}; construct a "
+            f"{type(spec).__name__} to get eager validation instead",
+            DeprecationWarning, stacklevel=2)
+    return spec.run(log_pi, log_A, emissions)
 
 
 def viterbi_decode_hmm(obs: jax.Array, hmm: HMM, method: str = "flash",

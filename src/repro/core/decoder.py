@@ -1,0 +1,128 @@
+"""`ViterbiDecoder` — one resource-adaptive decoder object for every call site.
+
+Binds a typed `DecodeSpec` to an HMM (log_pi, log_A) and exposes the three
+execution shapes the system serves through, uniformly:
+
+    dec = ViterbiDecoder(FlashSpec(parallelism=8), log_pi, log_A)
+    path,  score  = dec.decode(em)                      # one (T, K) sequence
+    paths, scores = dec.decode_batch(ems, lengths=ln)   # ragged (B, T, K)
+    paths, scores = dec.decode_sharded(ems, lengths=ln, mesh=mesh)
+
+Compilation is cached per (spec, shape-bucket): the single-sequence and
+batched entry points each hold one `jax.jit` callable (jit's own cache then
+keys on shapes — one compile per length bucket), and the sharded path reuses
+`core.batch`'s per-(mesh, method, tunables) compiled-decoder cache.  The
+streaming specs (`OnlineSpec`/`OnlineBeamSpec`) are stateful Python loops, so
+they run eagerly and reject the batched entry points.
+
+Results are bit-identical to the legacy `viterbi_decode(method=..., **kw)`
+shim built from the same tunables — both run the same `spec.run`;
+`tests/test_api.py` pins this for every method.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .spec import DecodeSpec, as_decode_spec
+
+__all__ = ["ViterbiDecoder"]
+
+
+class ViterbiDecoder:
+    """A `DecodeSpec` bound to one HMM, with jit-compile caching."""
+
+    def __init__(self, spec: DecodeSpec, log_pi, log_A):
+        self.spec = as_decode_spec(spec)
+        self.log_pi = jnp.asarray(log_pi)
+        self.log_A = jnp.asarray(log_A)
+        run = self.spec.run
+        if self.spec.jittable:
+            self._decode_fn = jax.jit(
+                lambda em: run(self.log_pi, self.log_A, em))
+        else:
+            self._decode_fn = lambda em: run(self.log_pi, self.log_A, em)
+        self._batch_fn = None   # built on first decode_batch
+
+    def __repr__(self):
+        return (f"ViterbiDecoder({self.spec!r}, "
+                f"K={int(self.log_A.shape[0])})")
+
+    # -- single sequence ----------------------------------------------------
+    def decode(self, emissions) -> tuple[jax.Array, jax.Array]:
+        """Decode one (T, K) sequence -> (path (T,) int32, score)."""
+        return self._decode_fn(jnp.asarray(emissions))
+
+    # -- ragged batch -------------------------------------------------------
+    def _require_batchable(self, entry: str) -> str:
+        if self.spec.batch_method is None:
+            raise ValueError(
+                f"{type(self.spec).__name__} has no batched path; {entry} "
+                f"needs a spec whose method is in core.batch.BATCH_METHODS")
+        return self.spec.batch_method
+
+    def _lengths(self, emissions, lengths) -> jax.Array:
+        from .batch import _validate_lengths
+        B, T = emissions.shape[0], emissions.shape[1]
+        if lengths is None:
+            return jnp.full((B,), T, jnp.int32)
+        lengths = jnp.asarray(lengths, jnp.int32)
+        _validate_lengths(lengths, T)   # eager, before entering jit
+        return lengths
+
+    def decode_batch(self, emissions, lengths=None
+                     ) -> tuple[jax.Array, jax.Array]:
+        """Decode a (B, T, K) batch; `lengths` (B,) makes rows ragged.
+
+        Inherits the `viterbi_decode_batch` contract: pad frames run as
+        tropical-identity steps, so `paths[i, :lengths[i]]` is bit-identical
+        to `decode(emissions[i, :lengths[i]])` for exact methods.
+        """
+        method = self._require_batchable("decode_batch")
+        if self._batch_fn is None:
+            from .batch import viterbi_decode_batch
+            tun = self.spec.batch_tunables()
+            self._batch_fn = jax.jit(
+                lambda em, ln: viterbi_decode_batch(
+                    em, self.log_pi, self.log_A, ln, method=method, **tun))
+        emissions = jnp.asarray(emissions)
+        return self._batch_fn(emissions, self._lengths(emissions, lengths))
+
+    # -- mesh-sharded batch -------------------------------------------------
+    def decode_sharded(self, emissions, lengths=None, *, mesh,
+                       data_axis: str = "data"
+                       ) -> tuple[jax.Array, jax.Array]:
+        """Decode a (B, T, K) batch sharded over `mesh`'s `data_axis`.
+
+        Buckets whose size does not divide the axis are padded up with
+        length-1 dummy rows and sliced back (sequences are independent, so
+        dummies change nothing).  Per-sequence results stay bit-identical to
+        `decode_batch` — the shard body is the same per-device decode.
+        """
+        method = self._require_batchable("decode_sharded")
+        from .batch import viterbi_decode_batch
+        emissions = jnp.asarray(emissions)
+        B = emissions.shape[0]
+        lengths = self._lengths(emissions, lengths)
+        pad_b = -B % mesh.shape[data_axis]
+        if pad_b:
+            emissions = jnp.concatenate(
+                [emissions,
+                 jnp.zeros((pad_b,) + emissions.shape[1:], emissions.dtype)])
+            lengths = jnp.concatenate(
+                [lengths, jnp.ones((pad_b,), jnp.int32)])
+        paths, scores = viterbi_decode_batch(
+            emissions, self.log_pi, self.log_A, lengths, method=method,
+            mesh=mesh, data_axis=data_axis, **self.spec.batch_tunables())
+        return paths[:B], scores[:B]
+
+    # -- streaming ----------------------------------------------------------
+    def make_streaming(self):
+        """Stateful incremental decoder for the streaming specs."""
+        mk = getattr(self.spec, "make_streaming", None)
+        if mk is None:
+            raise ValueError(
+                f"{type(self.spec).__name__} is not a streaming spec; use "
+                f"OnlineSpec / OnlineBeamSpec")
+        return mk(self.log_pi, self.log_A)

@@ -270,12 +270,14 @@ def make_flash_viterbi_2d(mesh: Mesh, T: int, K: int, parallelism: int | None = 
                    out_shardings=(repl, repl))
 
 
-BATCHED_DECODER_METHODS = ("vanilla", "flash", "fused")
+BATCHED_DECODER_METHODS = ("vanilla", "flash", "flash_bs", "fused")
 
 
 def make_batched_flash_decoder(mesh: Mesh, data_axis: str = "data",
                                method: str = "flash", *,
+                               spec=None,
                                parallelism: int = 8, lanes: int | None = None,
+                               beam_width: int = 128, chunk: int = 128,
                                bt: int = 8):
     """Batch-of-sequences serving decoder: sequences shard over `data_axis`.
 
@@ -287,24 +289,38 @@ def make_batched_flash_decoder(mesh: Mesh, data_axis: str = "data",
 
     Args:
       mesh: the device mesh; ``mesh.shape[data_axis]`` must divide B.
-      method: ``vanilla`` (masked-scan oracle), ``flash`` (wavefront, fully
-        vectorised per sequence with lanes=None by default), or ``fused``
-        (batch-grid Pallas kernel).
-      parallelism / lanes / bt: forwarded to `viterbi_decode_batch`.
+      spec: a batchable `core.DecodeSpec` — the preferred form; supplies the
+        method and all tunables (``method``/``parallelism``/``lanes``/``bt``
+        are then ignored).
+      method: legacy string form — ``vanilla`` (masked-scan oracle), ``flash``
+        (wavefront, fully vectorised per sequence with lanes=None by
+        default), ``flash_bs`` (dynamic beam), or ``fused`` (batch-grid
+        Pallas kernel).
+      parallelism / lanes / beam_width / chunk / bt: forwarded to
+        `viterbi_decode_batch` (beam_width/chunk only matter for flash_bs).
 
     Returns a jitted ``decode(log_pi, log_A, ems (B, T, K), lengths (B,))
     -> (paths (B, T), scores (B,))``.
     """
-    if method not in BATCHED_DECODER_METHODS:
-        raise ValueError(f"unknown method {method!r}; choose from "
-                         f"{BATCHED_DECODER_METHODS}")
     from .batch import viterbi_decode_batch
+    if spec is not None:
+        if spec.batch_method is None:
+            raise ValueError(f"{type(spec).__name__} has no batched path; "
+                             f"choose a spec whose method is in "
+                             f"{BATCHED_DECODER_METHODS}")
+        method = spec.batch_method
+        tunables = spec.batch_tunables()
+    else:
+        if method not in BATCHED_DECODER_METHODS:
+            raise ValueError(f"unknown method {method!r}; choose from "
+                             f"{BATCHED_DECODER_METHODS}")
+        tunables = dict(parallelism=parallelism, lanes=lanes,
+                        beam_width=beam_width, chunk=chunk, bt=bt)
 
     def decode(log_pi, log_A, ems, lengths):
         return viterbi_decode_batch(ems, log_pi, log_A, lengths,
-                                    method=method, parallelism=parallelism,
-                                    lanes=lanes, bt=bt,
-                                    mesh=mesh, data_axis=data_axis)
+                                    method=method, mesh=mesh,
+                                    data_axis=data_axis, **tunables)
 
     repl = NamedSharding(mesh, P())
     return jax.jit(

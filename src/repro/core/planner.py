@@ -1,0 +1,145 @@
+"""Budget -> spec planning: the paper's adaptivity story as a first-class API.
+
+Two pieces live here:
+
+* **The memory cost model.** `decoder_state_bytes(method, K, T, P, B)` — the
+  analytic live-DP-state formulas the paper's Fig. 1/7/9 track (RSS on a JIT
+  runtime measures the allocator, not the algorithm).  This used to live in
+  `benchmarks/common.py`; it is core now, so benchmarks and examples import
+  it *from* core and never the reverse.  `spec_state_bytes(spec, K, T)` is
+  the typed view of the same model.
+
+* **The degradation ladder.** `plan(K, T, budget)` turns a `ResourceBudget`
+  into a `DecodePlan` — a concrete `DecodeSpec` plus a human-readable `why`.
+  The policy is the paper's Sec. V-C-3 (previously a private helper in
+  `examples/adaptive_edge.py`): prefer the exact decoder at the largest
+  parallelism that fits, then shrink P, then fall back to the dynamic beam
+  (widest beam first), then the floor config.  The ladder is ordered so a
+  smaller budget can never yield a larger-footprint plan (pinned by
+  `tests/test_api.py`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .spec import DecodeSpec, FlashSpec, FlashBSSpec, ResourceBudget
+
+__all__ = ["decoder_state_bytes", "spec_state_bytes", "DecodePlan", "plan"]
+
+
+def decoder_state_bytes(method: str, K: int, T: int, P: int = 8,
+                        B: int = 128) -> int:
+    """Live DP-state bytes per the complexity table (paper Fig. 1).
+
+    4-byte scores + 4-byte indices; FLASH tracks (OptProb, PreState-equivalent,
+    MidState/DivState); beams track (score, state, mid) per slot.
+    """
+    if method in ("vanilla", "fused", "online"):
+        # full psi table + delta; `fused` streams the same table through the
+        # kernel, `online` holds it as the worst-case commit window.
+        return K * T * 4 + K * 8
+    if method == "checkpoint":
+        c = int(math.ceil(math.sqrt(T)))
+        return K * c * 4 + K * c * 4 + K * 8     # checkpoints + segment psis
+    if method in ("sieve", "sieve_mp"):
+        return K * 12                            # delta + mid + entry vector
+    if method == "flash":
+        return P * K * 12 + (P - 1) * K * 4      # P lanes + DivState
+    if method in ("flash_bs", "online_beam"):
+        return P * B * 12 + (P - 1) * B * 4
+    if method == "beam_static":
+        return K * 4 + T * B * 8                 # full-K transient + survivors
+    if method == "beam_static_mp":
+        return K * 4 + P * B * 12                # full-K transient per step
+    if method == "assoc":
+        return T * K * K * 4
+    raise ValueError(method)
+
+
+def spec_state_bytes(spec: DecodeSpec, K: int, T: int) -> int:
+    """Cost-model bytes for a typed spec (the planner's fitness function)."""
+    P = getattr(spec, "parallelism", 1)
+    B = getattr(spec, "beam_width", 128)
+    return decoder_state_bytes(spec.method, K, T, P=P, B=B)
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodePlan:
+    """A planner decision: the spec to run plus the reasoning behind it.
+
+    state_bytes is the cost-model estimate for the *whole* planned workload
+    (per-sequence bytes x batch when a batch size was planned for).
+    """
+    spec: DecodeSpec
+    why: str
+    state_bytes: int
+    K: int
+    T: int
+    batch: int | None = None
+    budget: ResourceBudget | None = None
+
+
+# Paper Sec. V-C-3 ladder, exactly the old examples/adaptive_edge.choose_config
+# ordering: exact at descending P, then beams widest-first with descending P,
+# then the floor.  First fit wins, so footprint is monotone in the budget.
+_EXACT_P = (16, 8, 4, 2, 1)
+_BEAM_B = (256, 128, 64, 32)
+_BEAM_P = (8, 4, 1)
+_FLOOR = FlashBSSpec(parallelism=1, beam_width=16)
+
+
+def plan(K: int, T: int,
+         budget: ResourceBudget | int | None = None,
+         batch: int | None = None) -> DecodePlan:
+    """Pick the best-fitting decoder spec for a (K, T) workload.
+
+    Args:
+      K, T: state count and sequence length of the workload.
+      budget: a `ResourceBudget`, a raw byte count (shorthand for
+        ``ResourceBudget(memory_bytes=...)``), or None (unlimited).
+      batch: optional number of sequences decoded together; the footprint is
+        per-sequence bytes x batch, and the chosen spec is guaranteed to be a
+        `viterbi_decode_batch` method.
+
+    Returns a `DecodePlan`; `.spec` is ready for `ViterbiDecoder` and
+    `.why` says which ladder rung fired and what it cost.
+    """
+    if isinstance(budget, int):
+        budget = ResourceBudget(memory_bytes=budget)
+    budget = budget or ResourceBudget()
+    if batch is not None and batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    scale = int(batch) if batch is not None else 1
+    cap = budget.memory_bytes
+
+    def fits(spec: DecodeSpec) -> int | None:
+        bytes_ = spec_state_bytes(spec, K, T) * scale
+        return bytes_ if cap is None or bytes_ <= cap else None
+
+    def mk(spec, why, bytes_):
+        per = " per batch" if batch else ""
+        cap_s = ""
+        if cap is not None:
+            rel = "<=" if bytes_ <= cap else "exceeds"
+            cap_s = f" {rel} budget {cap:,}B"
+        return DecodePlan(spec=spec, why=f"{why} (state {bytes_:,}B{per}{cap_s})",
+                          state_bytes=bytes_, K=K, T=T, batch=batch,
+                          budget=budget)
+
+    exact_ps = (_EXACT_P if budget.latency_hint != "memory"
+                else tuple(reversed(_EXACT_P)))
+    for P in exact_ps:
+        spec = FlashSpec(parallelism=P)
+        bytes_ = fits(spec)
+        if bytes_ is not None:
+            return mk(spec, f"exact, P={P}", bytes_)
+    for B in _BEAM_B:
+        for P in _BEAM_P:
+            spec = FlashBSSpec(parallelism=P, beam_width=B)
+            bytes_ = fits(spec)
+            if bytes_ is not None:
+                return mk(spec, f"beam, P={P}, B={B}", bytes_)
+    return mk(_FLOOR, "floor: P=1,B=16",
+              spec_state_bytes(_FLOOR, K, T) * scale)

@@ -1,0 +1,375 @@
+"""Typed decode specs — the configuration objects behind every decoder.
+
+A `DecodeSpec` is a frozen, hashable dataclass that pins *one* point on the
+paper's time/memory trade-off curve: the algorithm plus exactly the tunables
+that algorithm consumes.  Nonsense is rejected eagerly (`beam_width=0` raises
+at construction, an unknown tunable raises `TypeError` from the dataclass
+constructor) instead of being silently dropped the way the legacy
+string+kwargs dispatch did.
+
+Specs are the currency of the whole call graph above the kernels:
+
+    spec = FlashSpec(parallelism=8)            # or planner.plan(...).spec
+    path, score = spec.run(log_pi, log_A, em)  # one sequence, eager
+    dec = ViterbiDecoder(spec, log_pi, log_A)  # jit-cached decoder object
+
+Hashability is load-bearing: a spec is a jit-cache / plan-cache key, so every
+field is a scalar or None and the dataclasses are `frozen=True`.
+
+`ResourceBudget` is the *input* to the planner (`core/planner.py`): how much
+memory the deployment grants the live DP state, and which way to lean when
+several specs fit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, ClassVar, Mapping
+
+__all__ = [
+    "ResourceBudget", "DecodeSpec",
+    "VanillaSpec", "CheckpointSpec", "FlashSpec", "FlashBSSpec",
+    "BeamStaticSpec", "BeamStaticMPSpec", "AssocSpec", "FusedSpec",
+    "OnlineSpec", "OnlineBeamSpec",
+    "SPEC_BY_METHOD", "spec_from_tunables", "as_decode_spec",
+]
+
+
+def _check(cond: bool, msg: str) -> None:
+    if not cond:
+        raise ValueError(msg)
+
+
+def _check_pos(value: Any, name: str) -> None:
+    _check(isinstance(value, int) and not isinstance(value, bool)
+           and value >= 1, f"{name} must be an int >= 1, got {value!r}")
+
+
+def _check_lanes(lanes: Any) -> None:
+    """lanes: None = vectorise whole layers, -1 = match parallelism, n >= 1."""
+    if lanes is None or lanes == -1:
+        return
+    _check_pos(lanes, "lanes")
+
+
+def _check_opt_pos(value: Any, name: str) -> None:
+    if value is not None:
+        _check_pos(value, name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceBudget:
+    """Deployment resource envelope handed to the planner.
+
+    memory_bytes: cap on *live decoder-state bytes* (the quantity the paper's
+      Fig. 1/7/9 track — see `planner.decoder_state_bytes`); None = unlimited.
+    latency_hint: which way to lean among configs that fit —
+      "latency" (default: exact decode with the largest parallelism that
+      fits) or "memory" (smallest-footprint exact config, headroom be damned).
+    """
+    memory_bytes: int | None = None
+    latency_hint: str | None = None
+
+    def __post_init__(self):
+        if self.memory_bytes is not None:
+            _check_pos(self.memory_bytes, "memory_bytes")
+        _check(self.latency_hint in (None, "latency", "memory"),
+               f"latency_hint must be None, 'latency' or 'memory', "
+               f"got {self.latency_hint!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSpec:
+    """Base class: one decoding algorithm + its (validated) tunables.
+
+    Subclasses set the class-level contract:
+      method          — the legacy `viterbi_decode(method=...)` string.
+      batch_method    — name in `core.batch.BATCH_METHODS`, or None if the
+                        algorithm has no batched path.
+      jittable        — whether `run` may be wrapped in one `jax.jit`
+                        (the streaming decoders are stateful Python, so no).
+      legacy_tunables — legacy `viterbi_decode` kwarg name -> field name map;
+                        anything *not* listed here is ignored-with-a-warning
+                        by the back-compat shim and rejected by the spec.
+    """
+    method: ClassVar[str] = ""
+    batch_method: ClassVar[str | None] = None
+    jittable: ClassVar[bool] = True
+    legacy_tunables: ClassVar[Mapping[str, str]] = {}
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> None:
+        """Eager validation; subclasses raise ValueError on nonsense."""
+
+    def run(self, log_pi, log_A, emissions):
+        """Decode one (T, K) sequence; returns (path (T,) int32, score)."""
+        raise NotImplementedError
+
+    def batch_tunables(self) -> dict[str, Any]:
+        """Tunables forwarded to `viterbi_decode_batch` (batchable specs)."""
+        return {}
+
+
+@dataclasses.dataclass(frozen=True)
+class VanillaSpec(DecodeSpec):
+    """Textbook DP with the full backpointer table — the exact oracle."""
+    method: ClassVar[str] = "vanilla"
+    batch_method: ClassVar[str | None] = "vanilla"
+
+    def run(self, log_pi, log_A, emissions):
+        from .vanilla import viterbi_vanilla
+        return viterbi_vanilla(log_pi, log_A, emissions)
+
+
+@dataclasses.dataclass(frozen=True)
+class CheckpointSpec(DecodeSpec):
+    """Tarnas–Hughey checkpointing; seg_len=None means ceil(sqrt(T))."""
+    method: ClassVar[str] = "checkpoint"
+    legacy_tunables: ClassVar[Mapping[str, str]] = {"seg_len": "seg_len"}
+    seg_len: int | None = None
+
+    def validate(self):
+        _check_opt_pos(self.seg_len, "seg_len")
+
+    def run(self, log_pi, log_A, emissions):
+        from .checkpoint_viterbi import viterbi_checkpoint
+        return viterbi_checkpoint(log_pi, log_A, emissions,
+                                  seg_len=self.seg_len)
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashSpec(DecodeSpec):
+    """The paper's non-recursive divide-and-conquer wavefront (exact)."""
+    method: ClassVar[str] = "flash"
+    batch_method: ClassVar[str | None] = "flash"
+    legacy_tunables: ClassVar[Mapping[str, str]] = {
+        "parallelism": "parallelism", "lanes": "lanes"}
+    parallelism: int = 8
+    lanes: int | None = -1
+
+    def validate(self):
+        _check_pos(self.parallelism, "parallelism")
+        _check_lanes(self.lanes)
+
+    def run(self, log_pi, log_A, emissions):
+        from .flash import flash_viterbi
+        return flash_viterbi(log_pi, log_A, emissions,
+                             parallelism=self.parallelism, lanes=self.lanes)
+
+    def batch_tunables(self):
+        return {"parallelism": self.parallelism, "lanes": self.lanes}
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashBSSpec(DecodeSpec):
+    """FLASH with the dynamic top-B beam (exact when beam_width >= K)."""
+    method: ClassVar[str] = "flash_bs"
+    batch_method: ClassVar[str | None] = "flash_bs"
+    legacy_tunables: ClassVar[Mapping[str, str]] = {
+        "beam_width": "beam_width", "parallelism": "parallelism",
+        "lanes": "lanes", "chunk": "chunk"}
+    beam_width: int = 128
+    parallelism: int = 8
+    lanes: int | None = -1
+    chunk: int = 128
+
+    def validate(self):
+        _check_pos(self.beam_width, "beam_width")
+        _check_pos(self.parallelism, "parallelism")
+        _check_lanes(self.lanes)
+        _check_pos(self.chunk, "chunk")
+
+    def run(self, log_pi, log_A, emissions):
+        from .flash_bs import flash_bs_viterbi
+        return flash_bs_viterbi(log_pi, log_A, emissions,
+                                beam_width=self.beam_width,
+                                parallelism=self.parallelism,
+                                lanes=self.lanes, chunk=self.chunk)
+
+    def batch_tunables(self):
+        return {"beam_width": self.beam_width,
+                "parallelism": self.parallelism,
+                "lanes": self.lanes, "chunk": self.chunk}
+
+
+@dataclasses.dataclass(frozen=True)
+class BeamStaticSpec(DecodeSpec):
+    """Static beam baseline (scores all K, then truncates to the beam)."""
+    method: ClassVar[str] = "beam_static"
+    legacy_tunables: ClassVar[Mapping[str, str]] = {"beam_width": "beam_width"}
+    beam_width: int = 128
+
+    def validate(self):
+        _check_pos(self.beam_width, "beam_width")
+
+    def run(self, log_pi, log_A, emissions):
+        from .beam_static import beam_static_viterbi
+        return beam_static_viterbi(log_pi, log_A, emissions,
+                                   B=min(self.beam_width,
+                                         emissions.shape[1]))
+
+
+@dataclasses.dataclass(frozen=True)
+class BeamStaticMPSpec(DecodeSpec):
+    """Static beam on the multi-partition FLASH wavefront."""
+    method: ClassVar[str] = "beam_static_mp"
+    legacy_tunables: ClassVar[Mapping[str, str]] = {
+        "beam_width": "beam_width", "parallelism": "parallelism",
+        "lanes": "lanes"}
+    beam_width: int = 128
+    parallelism: int = 8
+    lanes: int | None = -1
+
+    def validate(self):
+        _check_pos(self.beam_width, "beam_width")
+        _check_pos(self.parallelism, "parallelism")
+        _check_lanes(self.lanes)
+
+    def run(self, log_pi, log_A, emissions):
+        from .beam_static import beam_static_mp_viterbi
+        return beam_static_mp_viterbi(log_pi, log_A, emissions,
+                                      beam_width=self.beam_width,
+                                      parallelism=self.parallelism,
+                                      lanes=self.lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class AssocSpec(DecodeSpec):
+    """Tropical associative scan — O(log T) depth, O(K^3 T) work."""
+    method: ClassVar[str] = "assoc"
+
+    def run(self, log_pi, log_A, emissions):
+        from .assoc import viterbi_assoc
+        return viterbi_assoc(log_pi, log_A, emissions)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedSpec(DecodeSpec):
+    """Fused Pallas forward kernel (log_A VMEM-resident) + XLA backtrack.
+
+    `bt` is the time-block size of the batch-grid kernel; the single-sequence
+    path picks its own tiling.
+    """
+    method: ClassVar[str] = "fused"
+    batch_method: ClassVar[str | None] = "fused"
+    legacy_tunables: ClassVar[Mapping[str, str]] = {"bt": "bt"}
+    bt: int = 8
+
+    def validate(self):
+        _check_pos(self.bt, "bt")
+
+    def run(self, log_pi, log_A, emissions):
+        from repro.kernels.ops import viterbi_decode_fused
+        return viterbi_decode_fused(log_pi, log_A, emissions)
+
+    def batch_tunables(self):
+        return {"bt": self.bt}
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineSpec(DecodeSpec):
+    """Streaming exact decode (convergence-point commits), one-shot form.
+
+    `stream_chunk` is the chunk size the one-shot `run` feeds with; `max_lag`
+    bounds commit latency (forced flushes make the forced part approximate).
+    For true incremental use build the decoder via `make_streaming`.
+    """
+    method: ClassVar[str] = "online"
+    jittable: ClassVar[bool] = False
+    legacy_tunables: ClassVar[Mapping[str, str]] = {
+        "stream_chunk": "stream_chunk", "max_lag": "max_lag"}
+    stream_chunk: int = 64
+    max_lag: int | None = None
+
+    def validate(self):
+        _check_pos(self.stream_chunk, "stream_chunk")
+        _check_opt_pos(self.max_lag, "max_lag")
+
+    def run(self, log_pi, log_A, emissions):
+        from .online import viterbi_online
+        return viterbi_online(log_pi, log_A, emissions,
+                              chunk_size=self.stream_chunk,
+                              max_lag=self.max_lag)
+
+    def make_streaming(self, log_pi, log_A):
+        """The stateful incremental decoder `serving.stream` wraps."""
+        from .online import OnlineViterbiDecoder
+        return OnlineViterbiDecoder(log_pi, log_A, max_lag=self.max_lag)
+
+
+@dataclasses.dataclass(frozen=True)
+class OnlineBeamSpec(DecodeSpec):
+    """Streaming dynamic beam — live state O(W*B), K never materialises."""
+    method: ClassVar[str] = "online_beam"
+    jittable: ClassVar[bool] = False
+    legacy_tunables: ClassVar[Mapping[str, str]] = {
+        "beam_width": "beam_width", "chunk": "kchunk",
+        "stream_chunk": "stream_chunk", "max_lag": "max_lag"}
+    beam_width: int = 128
+    kchunk: int = 128
+    stream_chunk: int = 64
+    max_lag: int | None = None
+
+    def validate(self):
+        _check_pos(self.beam_width, "beam_width")
+        _check_pos(self.kchunk, "kchunk")
+        _check_pos(self.stream_chunk, "stream_chunk")
+        _check_opt_pos(self.max_lag, "max_lag")
+
+    def run(self, log_pi, log_A, emissions):
+        from .online import viterbi_online_beam
+        return viterbi_online_beam(log_pi, log_A, emissions,
+                                   beam_width=self.beam_width,
+                                   kchunk=self.kchunk,
+                                   chunk_size=self.stream_chunk,
+                                   max_lag=self.max_lag)
+
+    def make_streaming(self, log_pi, log_A):
+        from .online import OnlineBeamDecoder
+        return OnlineBeamDecoder(log_pi, log_A, beam_width=self.beam_width,
+                                 kchunk=self.kchunk, max_lag=self.max_lag)
+
+
+SPEC_BY_METHOD: dict[str, type[DecodeSpec]] = {
+    cls.method: cls for cls in (
+        VanillaSpec, CheckpointSpec, FlashSpec, FlashBSSpec,
+        BeamStaticSpec, BeamStaticMPSpec, AssocSpec, FusedSpec,
+        OnlineSpec, OnlineBeamSpec)
+}
+
+
+def spec_from_tunables(method: str, tunables: dict[str, Any],
+                       ) -> tuple[DecodeSpec, tuple[str, ...]]:
+    """Build the spec for a legacy (method, kwargs) call.
+
+    Returns (spec, ignored): `ignored` names the tunables `method` does not
+    consume — the back-compat `viterbi_decode` shim turns those into a
+    DeprecationWarning instead of the old silent drop.
+    """
+    try:
+        cls = SPEC_BY_METHOD[method]
+    except KeyError:
+        raise ValueError(f"unknown method {method!r}; choose from "
+                         f"{tuple(SPEC_BY_METHOD)}") from None
+    fields: dict[str, Any] = {}
+    ignored: list[str] = []
+    for name, value in tunables.items():
+        target = cls.legacy_tunables.get(name)
+        if target is None:
+            ignored.append(name)
+        else:
+            fields[target] = value
+    return cls(**fields), tuple(ignored)
+
+
+def as_decode_spec(obj: Any) -> DecodeSpec:
+    """Coerce a spec-like object (spec, or anything with `.to_spec()`)."""
+    if isinstance(obj, DecodeSpec):
+        return obj
+    to_spec = getattr(obj, "to_spec", None)
+    if callable(to_spec):
+        return to_spec()
+    raise TypeError(f"expected a DecodeSpec (or an object with .to_spec()), "
+                    f"got {type(obj).__name__}")

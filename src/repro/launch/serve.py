@@ -3,9 +3,15 @@
     PYTHONPATH=src python -m repro.launch.serve --requests 32 --states 512 \
         --method flash_bs --beam 128
 
+    # or let the planner pick (method, P, B) from a memory budget:
+    PYTHONPATH=src python -m repro.launch.serve --requests 32 --budget-kb 64
+
 Spins up the encoder (smoke-sized hubert on CPU), a left-to-right HMM, the
-FLASH(-BS) alignment head, and the batching scheduler; reports latency and
-relative-error stats per request batch.
+alignment head, and the batching scheduler; reports latency and
+relative-error stats per request batch.  With ``--budget-kb`` the decode spec
+comes from `core.planner.plan` — the budget covers the live DP state of a
+full ``--max-batch`` bucket at the largest length bucket, which is the
+paper's adaptivity story running end-to-end in the serving path.
 """
 
 from __future__ import annotations
@@ -17,9 +23,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import left_to_right_hmm, viterbi_vanilla, relative_error
+from repro.core import (left_to_right_hmm, viterbi_vanilla, relative_error,
+                        plan, ResourceBudget)
 from repro.serving.alignment import AlignmentConfig, make_alignment_head
 from repro.serving.scheduler import BatchScheduler
+
+BUCKETS = (128, 256, 512)
 
 
 def main(argv=None):
@@ -31,6 +40,10 @@ def main(argv=None):
     ap.add_argument("--beam", type=int, default=128)
     ap.add_argument("--parallelism", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--budget-kb", type=float, default=None,
+                    help="live decoder-state budget (KiB) for a full batch; "
+                         "overrides --method/--beam/--parallelism via the "
+                         "planner")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -38,11 +51,19 @@ def main(argv=None):
     k_hmm, key = jax.random.split(key)
     hmm = left_to_right_hmm(k_hmm, args.states, args.classes)
 
-    acfg = AlignmentConfig(method=args.method, beam_width=args.beam,
-                           parallelism=args.parallelism)
-    head = make_alignment_head(hmm.log_pi, hmm.log_A, acfg)
-    sched = BatchScheduler(head, max_batch=args.max_batch,
-                           buckets=(128, 256, 512))
+    if args.budget_kb is not None:
+        decode_plan = plan(args.states, max(BUCKETS),
+                           ResourceBudget(memory_bytes=int(args.budget_kb
+                                                           * 1024)),
+                           batch=args.max_batch)
+        spec = decode_plan.spec
+        print(f"planner: budget={args.budget_kb:.0f}KiB "
+              f"x batch {args.max_batch} -> {spec}  [{decode_plan.why}]")
+    else:
+        spec = AlignmentConfig(method=args.method, beam_width=args.beam,
+                               parallelism=args.parallelism).to_spec()
+    head = make_alignment_head(hmm.log_pi, hmm.log_A, spec)
+    sched = BatchScheduler(head, max_batch=args.max_batch, buckets=BUCKETS)
 
     rng = np.random.default_rng(args.seed)
     for _ in range(args.requests):

@@ -3,36 +3,51 @@
 This is the paper's workload running as a production operator: hubert-xlarge
 produces per-frame class posteriors (B, T, 504); a left-to-right HMM over the
 target transcription's states constrains the decode; FLASH-BS (dynamic beam)
-returns the per-frame alignment.  Batch shards over the data axis; the decode
-per sequence runs the full FLASH wavefront (lanes=None vectorised).
+returns the per-frame alignment.
 
-`method`/`beam_width`/`parallelism` plumb the paper's adaptivity: the same
-serving binary turns resource knobs instead of swapping decoders.
+The head is a thin wrapper around `core.ViterbiDecoder`: the alignment config
+resolves to a typed `DecodeSpec` (any batchable spec works — hand one in
+directly, or let `core.planner.plan` pick it from a memory budget), the
+decoder object owns jit caching, ragged `lengths`, and mesh sharding.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import flash_bs_viterbi, viterbi_decode_batch
+from repro.core import ViterbiDecoder, as_decode_spec, spec_from_tunables
 from repro.core.hmm import HMM
 
 
 @dataclasses.dataclass(frozen=True)
 class AlignmentConfig:
+    """Legacy string-form alignment profile; `to_spec()` is the typed view.
+
+    The batched serving path historically ran with whole-layer vectorisation
+    (`lanes=None`), so that is what the conversion pins.
+    """
     method: str = "flash_bs"       # flash | flash_bs | vanilla | fused
     beam_width: int = 128
     parallelism: int = 8
     chunk: int = 128
 
+    def to_spec(self):
+        # spec_from_tunables drops the fields `method` does not consume —
+        # the legacy container always carried all four, so no warning here.
+        spec, _ = spec_from_tunables(self.method, dict(
+            beam_width=self.beam_width, parallelism=self.parallelism,
+            chunk=self.chunk, lanes=None))
+        return spec
 
-def make_alignment_head(hmm_log_pi, hmm_log_A, cfg: AlignmentConfig, *,
+
+def make_alignment_head(hmm_log_pi, hmm_log_A, cfg, *,
                         mesh=None, data_axis: str = "data"):
     """Returns align(emissions (B, T, K), lengths=None) -> (paths, scores).
+
+    `cfg` is a `DecodeSpec` (preferred) or a legacy `AlignmentConfig`.
 
     `lengths` (B,) gives each request's true frame count; pad frames run as
     tropical-identity steps inside `viterbi_decode_batch`, so results are
@@ -40,47 +55,36 @@ def make_alignment_head(hmm_log_pi, hmm_log_A, cfg: AlignmentConfig, *,
     methods; FLASH-BS keeps its beam approximation but no pad corruption).
     This is the `decode_batch_fn` contract `BatchScheduler` expects.
 
-    With ``mesh=`` the request bucket shards over ``data_axis``
-    (`viterbi_decode_batch`'s multi-device path).  Buckets whose size does
-    not divide the axis are padded up with length-1 dummy rows and sliced
-    back — per-request results are unaffected (vmap lanes never interact).
+    With ``mesh=`` the request bucket shards over ``data_axis`` via
+    `ViterbiDecoder.decode_sharded`, which pads non-divisible bucket sizes
+    with length-1 dummy rows and slices back — per-request results are
+    unaffected (vmap lanes never interact).
     """
-
-    @jax.jit
-    def _align(em, lengths):
-        return viterbi_decode_batch(em, hmm_log_pi, hmm_log_A, lengths,
-                                    method=cfg.method,
-                                    parallelism=cfg.parallelism, lanes=None,
-                                    beam_width=cfg.beam_width, chunk=cfg.chunk,
-                                    mesh=mesh, data_axis=data_axis)
+    spec = as_decode_spec(cfg)
+    dec = ViterbiDecoder(spec, hmm_log_pi, hmm_log_A)
 
     def align(em, lengths=None):
-        em = jnp.asarray(em)
-        B = em.shape[0]
-        if lengths is None:
-            lengths = jnp.full((B,), em.shape[1], jnp.int32)
-        lengths = jnp.asarray(lengths, jnp.int32)
         if mesh is not None:
-            pad_b = -B % mesh.shape[data_axis]
-            if pad_b:
-                em = jnp.concatenate(
-                    [em, jnp.zeros((pad_b,) + em.shape[1:], em.dtype)])
-                lengths = jnp.concatenate(
-                    [lengths, jnp.ones((pad_b,), jnp.int32)])
-        paths, scores = _align(em, lengths)
-        return paths[:B], scores[:B]
+            return dec.decode_sharded(em, lengths, mesh=mesh,
+                                      data_axis=data_axis)
+        return dec.decode_batch(em, lengths)
 
+    align.decoder = dec
     return align
 
 
 def make_e2e_align_step(model, params_treedef_hint, hmm: HMM,
-                        cfg: AlignmentConfig, num_classes: int):
+                        cfg, num_classes: int):
     """Encoder forward + log-softmax emissions + Viterbi alignment, one jit.
 
     The serving step for the hubert cells: batch {"embeds": (B, S, D)} ->
-    (paths (B, S), scores (B,)).
+    (paths (B, S), scores (B,)).  `cfg` is a `DecodeSpec` or legacy
+    `AlignmentConfig`.
     """
-    head = None  # built lazily inside jit from hmm params (closed over)
+    spec = as_decode_spec(cfg)
+    if not spec.jittable:
+        raise ValueError(f"{type(spec).__name__} cannot run inside the "
+                         f"jitted e2e step; use an offline (jittable) spec")
 
     def step(params, batch):
         x = batch["embeds"]
@@ -92,13 +96,7 @@ def make_e2e_align_step(model, params_treedef_hint, hmm: HMM,
         h = rms_norm(h, params["ln_out"])
         logits = (h @ params["head"]).astype(jnp.float32)
         em = jax.nn.log_softmax(logits[..., :num_classes], axis=-1)
-
-        def one(e):
-            return flash_bs_viterbi(hmm.log_pi, hmm.log_A, e,
-                                    beam_width=cfg.beam_width,
-                                    parallelism=cfg.parallelism, lanes=None,
-                                    chunk=cfg.chunk)
-        return jax.vmap(one)(em)
+        return jax.vmap(lambda e: spec.run(hmm.log_pi, hmm.log_A, e))(em)
 
     return step
 

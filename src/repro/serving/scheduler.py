@@ -34,9 +34,19 @@ class Request:
 
 
 class BatchScheduler:
-    def __init__(self, decode_batch_fn: Callable, max_batch: int = 8,
+    """Packs requests into padded buckets and runs one batched decode.
+
+    `decode_batch_fn` is either the raw callable contract above, or a
+    `core.ViterbiDecoder` — the scheduler then drives its `decode_batch`
+    (the decoder owns jit caching per bucket shape and the lengths contract).
+    """
+
+    def __init__(self, decode_batch_fn, max_batch: int = 8,
                  buckets: tuple[int, ...] = (128, 256, 512, 1024, 2048)):
-        self.fn = decode_batch_fn
+        from repro.core import ViterbiDecoder
+        if isinstance(decode_batch_fn, ViterbiDecoder):
+            decode_batch_fn = decode_batch_fn.decode_batch
+        self.fn: Callable = decode_batch_fn
         self.max_batch = max_batch
         self.buckets = sorted(buckets)
         self.queue: deque[Request] = deque()

@@ -22,7 +22,8 @@ import time
 
 import numpy as np
 
-from repro.core.online import OnlineBeamDecoder, OnlineViterbiDecoder
+from repro.core import as_decode_spec
+from repro.core.spec import OnlineBeamSpec, OnlineSpec
 
 
 @dataclasses.dataclass(frozen=True)
@@ -32,20 +33,30 @@ class StreamConfig:
     method "online" is exact (O(W*K) live state, W the convergence window);
     "online_beam" caps live state at O(W*B) independent of K.  ``max_lag``
     bounds commit latency (and W) at the cost of exactness on forced steps.
+
+    Legacy string form; sessions also accept an `OnlineSpec` /
+    `OnlineBeamSpec` directly (`to_spec()` is the conversion).
     """
     method: str = "online"            # online | online_beam
     beam_width: int = 128
     kchunk: int = 128                 # K-chunking of the beam transition
     max_lag: int | None = None
 
+    def to_spec(self):
+        if self.method == "online":
+            return OnlineSpec(max_lag=self.max_lag)
+        if self.method == "online_beam":
+            return OnlineBeamSpec(beam_width=self.beam_width,
+                                  kchunk=self.kchunk, max_lag=self.max_lag)
+        raise ValueError(f"unknown stream method {self.method!r}")
 
-def _make_decoder(log_pi, log_A, cfg: StreamConfig):
-    if cfg.method == "online":
-        return OnlineViterbiDecoder(log_pi, log_A, max_lag=cfg.max_lag)
-    if cfg.method == "online_beam":
-        return OnlineBeamDecoder(log_pi, log_A, beam_width=cfg.beam_width,
-                                 kchunk=cfg.kchunk, max_lag=cfg.max_lag)
-    raise ValueError(f"unknown stream method {cfg.method!r}")
+
+def _make_decoder(log_pi, log_A, cfg):
+    spec = as_decode_spec(cfg)
+    if not isinstance(spec, (OnlineSpec, OnlineBeamSpec)):
+        raise ValueError(f"streaming needs OnlineSpec/OnlineBeamSpec, "
+                         f"got {type(spec).__name__}")
+    return spec.make_streaming(log_pi, log_A)
 
 
 class StreamSession:
