@@ -3,8 +3,9 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-dist bench bench-smoke example-quickstart \
-	example-streaming example-batch example-adaptive serve-smoke
+.PHONY: test test-fast test-dist test-drills bench bench-smoke \
+	example-quickstart example-streaming example-batch example-adaptive \
+	serve-smoke loadtest-smoke
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
@@ -39,3 +40,12 @@ example-adaptive:  # planner smoke: budget -> spec -> decode (CI runs this)
 
 serve-smoke:  # budget-driven serving path end-to-end (CI runs this)
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.serve --budget-kb 64 --requests 4
+
+loadtest-smoke:  # seeded load + differential oracle -> benchmarks/out/loadtest.json (CI runs this)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.loadtest \
+	    --seed 0 --requests 16 --states 24 --stream-frac 0.25
+
+test-drills:  # fault drills (worker death / mesh rescale / budget shrink) on 8 virtual devices
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \
+	    XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PY) -m pytest -x -q -m drill tests/test_drills.py

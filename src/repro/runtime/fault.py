@@ -55,7 +55,12 @@ class StragglerDetector:
 
     def median(self) -> float:
         h = sorted(self.history)
-        return h[len(h) // 2] if h else 0.0
+        if not h:
+            return 0.0
+        n = len(h)
+        if n % 2:
+            return h[n // 2]
+        return 0.5 * (h[n // 2 - 1] + h[n // 2])
 
     def stragglers(self) -> list[int]:
         med = self.median()

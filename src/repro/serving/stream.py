@@ -75,12 +75,16 @@ class StreamSession:
         self.decoder = _make_decoder(log_pi, log_A, cfg)
         self._buf: list[np.ndarray] = []
         self._buffered = 0
+        self._final: tuple[np.ndarray, float] | None = None
         self.opened = time.monotonic()
         self.first_commit_s: float | None = None
         self.frames_in = 0
 
     def feed(self, frames) -> np.ndarray:
         """Buffer (C, K) frames; run whole blocks; return newly-final states."""
+        if self._final is not None:
+            raise RuntimeError(
+                f"session {self.sid} already finished; open a new one")
         frames = np.asarray(frames, dtype=np.float32)
         if frames.ndim != 2:
             raise ValueError(f"expected (C, K) frames, got {frames.shape}")
@@ -104,19 +108,33 @@ class StreamSession:
         return committed
 
     def finish(self) -> tuple[np.ndarray, float]:
-        """Drain the buffer, flush the decoder; returns (full path, score)."""
-        if self._buffered:
-            self.decoder.feed(np.concatenate(self._buf, axis=0))
-            self._buf, self._buffered = [], 0
-        self.decoder.flush()
-        return self.decoder.path, self.decoder.score
+        """Drain the buffer, flush the decoder; returns (full path, score).
+
+        Idempotent: a second ``finish()`` returns the same result instead of
+        re-flushing a dead decoder.
+        """
+        if self._final is None:
+            if self._buffered:
+                self.decoder.feed(np.concatenate(self._buf, axis=0))
+                self._buf, self._buffered = [], 0
+            self.decoder.flush()
+            self._final = (self.decoder.path, self.decoder.score)
+        return self._final
 
     @property
     def lag(self) -> int:
         return self.decoder.lag + self._buffered
 
     def live_state_bytes(self) -> int:
-        return self.decoder.live_state_bytes()
+        """Live bytes held for this session: decoder window + feed buffer.
+
+        The buffered frames are as live as the DP window — leaving them out
+        under-reports pressure (and made the metric sit flat while sub-block
+        feeds accumulated), which is exactly what an admission controller
+        must not see.
+        """
+        return (self.decoder.live_state_bytes()
+                + self._buffered * self.decoder.K * 4)
 
 
 class StreamMux:
@@ -153,8 +171,15 @@ class StreamMux:
         self.stats["opened"] += 1
         return sid
 
+    def _session(self, sid: int) -> StreamSession:
+        try:
+            return self._sessions[sid]
+        except KeyError:
+            raise KeyError(f"unknown or already-finished session {sid}"
+                           ) from None
+
     def feed(self, sid: int, frames) -> dict:
-        sess = self._sessions[sid]
+        sess = self._session(sid)
         committed = sess.feed(frames)
         self.stats["frames"] += int(np.asarray(frames).shape[0])
         self.stats["commits"] += int(committed.shape[0])
@@ -162,7 +187,8 @@ class StreamMux:
                 "n_committed": sess.decoder.n_committed}
 
     def finish(self, sid: int) -> tuple[np.ndarray, float]:
-        sess = self._sessions.pop(sid)
+        sess = self._session(sid)
+        del self._sessions[sid]
         self.stats["finished"] += 1
         return sess.finish()
 

@@ -1,0 +1,126 @@
+"""Direct unit tests for the fault-tolerance primitives.
+
+`HeartbeatMonitor` and `StragglerDetector` are the pure-logic half of the
+fault runtime — the drills in test_drills.py exercise them end-to-end, these
+pin the edge cases (0 workers, all dead, even-length median windows, window
+eviction) with an injected clock."""
+
+import numpy as np
+import pytest
+
+from repro.runtime.fault import HeartbeatMonitor, StragglerDetector
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def now(self):
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# HeartbeatMonitor
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_zero_workers_is_healthy():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_workers=0, timeout_s=1.0, clock=clock.now)
+    clock.t = 100.0
+    assert mon.dead_workers() == []
+    assert mon.healthy()
+
+
+def test_heartbeat_all_dead():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_workers=3, timeout_s=5.0, clock=clock.now)
+    clock.t = 5.0 + 1e-6
+    assert mon.dead_workers() == [0, 1, 2]
+    assert not mon.healthy()
+
+
+def test_heartbeat_boundary_is_alive():
+    """A worker seen exactly `timeout_s` ago is still alive (strict >)."""
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_workers=1, timeout_s=5.0, clock=clock.now)
+    clock.t = 5.0
+    assert mon.healthy()
+
+
+def test_heartbeat_beat_revives_only_that_worker():
+    clock = FakeClock()
+    mon = HeartbeatMonitor(num_workers=2, timeout_s=2.0, clock=clock.now)
+    clock.t = 3.0
+    mon.beat(0)
+    assert mon.dead_workers() == [1]
+    clock.t = 4.9
+    assert mon.dead_workers() == [1]
+    clock.t = 5.1
+    assert mon.dead_workers() == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# StragglerDetector
+# ---------------------------------------------------------------------------
+
+def test_median_odd_window():
+    det = StragglerDetector(num_workers=1)
+    for t in (3.0, 1.0, 2.0):
+        det.record(0, t)
+    assert det.median() == 2.0
+
+
+def test_median_even_window_is_true_median():
+    """Even-length windows must average the two middle elements, not take
+    the upper one — the upper-middle bias inflated the straggler threshold."""
+    det = StragglerDetector(num_workers=1)
+    for t in (1.0, 2.0, 3.0, 10.0):
+        det.record(0, t)
+    assert det.median() == pytest.approx(2.5)
+    assert det.median() == pytest.approx(np.median([1.0, 2.0, 3.0, 10.0]))
+
+
+def test_median_empty():
+    det = StragglerDetector(num_workers=2)
+    assert det.median() == 0.0
+    assert det.stragglers() == []
+
+
+def test_straggler_flagged_and_released():
+    det = StragglerDetector(num_workers=2, factor=3.0, window=16)
+    for _ in range(8):
+        det.record(0, 1.0)
+        det.record(1, 1.0)
+    det.record(1, 10.0)
+    assert det.stragglers() == [1]
+    det.record(1, 1.0)  # back to normal on its next step
+    assert det.stragglers() == []
+
+
+def test_straggler_even_window_regression():
+    """History [1, 1, 2, 5]: the true median is 1.5 (threshold 4.5), so the
+    5.0 step is a straggler.  The old upper-middle 'median' said 2.0
+    (threshold 6.0) and masked it."""
+    det = StragglerDetector(num_workers=2, factor=3.0)
+    for t in (1.0, 1.0, 2.0):
+        det.record(0, t)
+    det.record(1, 5.0)
+    assert det.median() == pytest.approx(1.5)
+    assert det.median() == pytest.approx(np.median([1.0, 1.0, 2.0, 5.0]))
+    assert det.stragglers() == [1]
+
+
+def test_window_eviction():
+    """Old samples fall out of the rolling window: an early spike regime must
+    stop dominating the median once `window * num_workers` newer samples
+    arrive."""
+    det = StragglerDetector(num_workers=1, factor=3.0, window=4)
+    for _ in range(4):
+        det.record(0, 100.0)
+    assert det.median() == 100.0
+    for _ in range(4):  # exactly window*num_workers fresh samples
+        det.record(0, 1.0)
+    assert det.median() == 1.0
+    assert len(det.history) == 4
+    det.record(0, 10.0)
+    assert det.stragglers() == [0]

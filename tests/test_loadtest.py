@@ -1,0 +1,183 @@
+"""The end-to-end scale harness: deterministic load generation, the harness
+event loop over BatchScheduler + StreamMux, and the differential serving
+oracle.
+
+Everything here runs tier-1-fast (small K/T, a handful of requests); the
+fault drills built on the same harness live in test_drills.py behind the
+`drill` marker."""
+
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.launch.loadtest import (LoadConfig, LoadHarness, VirtualClock,
+                                   make_workload, oracle_check, resolve_spec)
+
+SMOKE = LoadConfig(seed=3, requests=10, states=16, stream_frac=0.3,
+                   lengths=(8, 18, 30), buckets=(32,), max_batch=4,
+                   stream_block=8, stream_chunk=4, method="vanilla")
+
+
+# ---------------------------------------------------------------------------
+# Clock and generator
+# ---------------------------------------------------------------------------
+
+def test_virtual_clock():
+    clock = VirtualClock()
+    clock.advance(1.5)
+    clock.advance_to(1.0)          # never goes backwards
+    assert clock.now() == 1.5
+    clock.advance_to(2.0)
+    assert clock.now() == 2.0
+    with pytest.raises(ValueError):
+        clock.advance(-0.1)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="stream_frac"):
+        LoadConfig(stream_frac=1.5)
+    with pytest.raises(ValueError, match="bucket"):
+        LoadConfig(lengths=(256,), buckets=(64,))
+
+
+def test_workload_deterministic_from_seed():
+    """The whole trace — times, kinds, payload bytes — reproduces from the
+    seed; a different seed produces a different trace."""
+    w1, w2 = make_workload(SMOKE), make_workload(SMOKE)
+    assert len(w1.events) == len(w2.events)
+    for a, b in zip(w1.events, w2.events):
+        assert (a.t, a.seq, a.kind, a.rid) == (b.t, b.seq, b.kind, b.rid)
+        if a.frames is not None:
+            assert np.array_equal(a.frames, b.frames)
+    for rid in w1.payloads:
+        assert np.array_equal(w1.payloads[rid], w2.payloads[rid])
+    w3 = make_workload(dataclasses.replace(SMOKE, seed=SMOKE.seed + 1))
+    assert any(a.t != b.t for a, b in zip(w1.events, w3.events))
+
+
+def test_workload_shape():
+    w = make_workload(SMOKE)
+    assert set(w.kinds.values()) == {"offline", "stream"}
+    assert all(p.shape[0] in SMOKE.lengths and p.shape[1] == SMOKE.states
+               for p in w.payloads.values())
+    ts = [e.t for e in w.events]
+    assert ts == sorted(ts)
+    # streaming requests decompose into open -> feeds covering T -> finish
+    for rid, kind in w.kinds.items():
+        evs = [e for e in w.events if e.rid == rid]
+        if kind == "stream":
+            assert [e.kind for e in evs][0] == "open"
+            assert [e.kind for e in evs][-1] == "finish"
+            fed = sum(e.frames.shape[0] for e in evs if e.kind == "feed")
+            assert fed == w.payloads[rid].shape[0]
+        else:
+            assert [e.kind for e in evs] == ["offline"]
+
+
+def test_resolve_spec_budget_path():
+    spec, p = resolve_spec(SMOKE)
+    assert p is None and spec.method == "vanilla"
+    spec_b, plan_b = resolve_spec(dataclasses.replace(SMOKE, budget_kb=64.0))
+    assert plan_b is not None and plan_b.spec == spec_b
+    assert plan_b.state_bytes <= 64 * 1024
+
+
+# ---------------------------------------------------------------------------
+# Harness end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def smoke_report():
+    return LoadHarness(SMOKE).run()
+
+
+def test_harness_delivers_everything_exactly_once(smoke_report):
+    r = smoke_report["requests"]
+    assert r["delivered"] == r["total"] == SMOKE.requests
+    assert r["duplicates"] == 0
+    assert r["offline"] + r["stream"] == r["total"]
+
+
+def test_harness_oracle_passes(smoke_report):
+    """The tentpole invariant: every served path — batched, padded, muxed —
+    is bit-identical to an unbatched reference decode."""
+    ora = smoke_report["oracle"]
+    assert ora["ok"]
+    assert ora["offline"]["mismatches"] == []
+    assert ora["stream"]["mismatches"] == []
+    assert (ora["offline"]["checked"] + ora["stream"]["checked"]
+            == SMOKE.requests)
+    assert ora["offline"]["exact"]
+
+
+def test_harness_reports_throughput_and_percentiles(smoke_report):
+    tp = smoke_report["throughput"]
+    assert tp["requests_per_s"] > 0 and tp["frames_per_s"] > 0
+    off = smoke_report["latency_s"]["offline"]
+    assert off is not None and 0 <= off["p50"] <= off["p99"] <= off["max"]
+    assert smoke_report["scheduler"]["batches"] >= 1
+    assert smoke_report["stream"]["peak_live_state_bytes"] > 0
+
+
+def test_report_is_json_serialisable(smoke_report):
+    blob = json.dumps(smoke_report, default=str)
+    back = json.loads(blob)
+    assert back["config"]["seed"] == SMOKE.seed
+    for key in ("config", "spec", "requests", "throughput", "latency_s",
+                "scheduler", "stream", "oracle"):
+        assert key in back
+
+
+def test_budget_planned_harness_passes_oracle():
+    """The serve.py --budget-kb path, under load: budget -> plan -> spec ->
+    scheduler, still bit-identical to the oracle."""
+    cfg = dataclasses.replace(SMOKE, budget_kb=8.0, requests=6)
+    h = LoadHarness(cfg)
+    report = h.run()
+    assert report["spec"]["planned_why"] is not None
+    assert report["oracle"]["ok"]
+    assert report["requests"]["delivered"] == cfg.requests
+
+
+# ---------------------------------------------------------------------------
+# The oracle actually catches corruption
+# ---------------------------------------------------------------------------
+
+def test_oracle_flags_corrupted_path():
+    """Negative control: corrupt one frame of one served path and the oracle
+    must report it — otherwise the whole harness is a rubber stamp."""
+    cfg = dataclasses.replace(SMOKE, stream_frac=0.0, requests=6)
+    h = LoadHarness(cfg)
+    orig = h.sched.fn
+
+    def corrupting(padded, lengths):
+        paths, scores = orig(padded, lengths)
+        paths = np.asarray(paths).copy()
+        paths[0, 0] = (paths[0, 0] + 1) % cfg.states   # one wrong frame
+        return paths, scores
+
+    h.sched.fn = corrupting
+    report = h.run()
+    assert not report["oracle"]["ok"]
+    whats = {m["what"] for m in report["oracle"]["offline"]["mismatches"]}
+    assert "path_vs_looped_spec" in whats
+
+
+def test_oracle_flags_wrong_score():
+    cfg = dataclasses.replace(SMOKE, stream_frac=0.0, requests=4)
+    w = make_workload(cfg)
+    spec, _ = resolve_spec(cfg)
+    from repro.core import viterbi_vanilla
+    results = {}
+    for rid in list(w.payloads)[:2]:
+        p, s = viterbi_vanilla(w.hmm.log_pi, w.hmm.log_A, w.payloads[rid])
+        results[rid] = (np.asarray(p), float(s))
+    ora = oracle_check(spec, w.hmm, w.payloads, results)
+    assert ora["ok"]
+    rid0 = next(iter(results))
+    results[rid0] = (results[rid0][0], results[rid0][1] + 1.0)
+    ora2 = oracle_check(spec, w.hmm, w.payloads, results)
+    assert not ora2["ok"]
+    assert any(m["rid"] == rid0 for m in ora2["mismatches"])

@@ -177,6 +177,88 @@ def test_stream_mux_concurrent_sessions(problem):
     assert mux.stats["finished"] == 2
 
 
+# -- session / mux lifecycle ------------------------------------------------
+
+def _no_converge_hmm():
+    """Two disconnected, symmetric chains: hypotheses never merge, so no
+    convergence commit can ever fire — the window only grows."""
+    log_pi = np.zeros((2,), np.float32)
+    log_A = np.array([[0.0, -100.0], [-100.0, 0.0]], np.float32)
+    return log_pi, log_A
+
+
+def test_stream_finish_unfed_session(problem):
+    hmm, _, _, _ = problem
+    mux = StreamMux(hmm.log_pi, hmm.log_A, blocks=(16,))
+    sid = mux.open(block=16)
+    path, score = mux.finish(sid)
+    assert path.shape == (0,)
+    assert np.isnan(score)
+    assert mux.stats["finished"] == 1
+
+
+def test_stream_session_finish_is_idempotent(problem):
+    hmm, em, ref_path, ref_score = problem
+    sess = StreamSession(hmm.log_pi, hmm.log_A, StreamConfig(), block=16)
+    sess.feed(np.asarray(em[:40]))
+    p1, s1 = sess.finish()
+    p2, s2 = sess.finish()
+    assert np.array_equal(p1, p2) and s1 == s2
+    vp, vs = viterbi_vanilla(hmm.log_pi, hmm.log_A, em[:40])
+    assert np.array_equal(p1, np.asarray(vp))
+    assert float(s1) == float(vs)
+
+
+def test_stream_mux_double_finish_raises(problem):
+    hmm, em, _, _ = problem
+    mux = StreamMux(hmm.log_pi, hmm.log_A, blocks=(16,))
+    sid = mux.open(block=16)
+    mux.feed(sid, np.asarray(em[:20]))
+    mux.finish(sid)
+    with pytest.raises(KeyError, match="unknown or already-finished"):
+        mux.finish(sid)
+    with pytest.raises(KeyError, match="unknown or already-finished"):
+        mux.feed(sid, np.asarray(em[:4]))
+
+
+def test_stream_session_feed_after_finish_raises(problem):
+    """Regression: a sub-block feed after finish() used to buffer silently
+    (the decoder only sees whole blocks, so nothing raised) — the frames were
+    dropped on the floor."""
+    hmm, em, _, _ = problem
+    sess = StreamSession(hmm.log_pi, hmm.log_A, StreamConfig(), block=16)
+    sess.feed(np.asarray(em[:20]))
+    sess.finish()
+    with pytest.raises(RuntimeError, match="already finished"):
+        sess.feed(np.asarray(em[20:23]))   # smaller than one block
+
+
+def test_stream_live_state_bytes_counts_buffered_frames():
+    """Regression: live_state_bytes() ignored the feed buffer, sitting flat
+    while sub-block feeds accumulated live frames."""
+    log_pi, log_A = _no_converge_hmm()
+    sess = StreamSession(log_pi, log_A, StreamConfig(), block=64)
+    sizes = [sess.live_state_bytes()]
+    for _ in range(3):
+        sess.feed(np.zeros((8, 2), np.float32))   # sub-block: buffered only
+        sizes.append(sess.live_state_bytes())
+    assert all(b > a for a, b in zip(sizes, sizes[1:]))
+
+
+def test_stream_live_state_bytes_monotone_without_commits():
+    """With no convergence points and no max_lag, feeding never shrinks the
+    reported live state — across both buffered and whole-block advances."""
+    log_pi, log_A = _no_converge_hmm()
+    sess = StreamSession(log_pi, log_A, StreamConfig(), block=16)
+    sizes = [sess.live_state_bytes()]
+    for _ in range(10):
+        out = sess.feed(np.zeros((7, 2), np.float32))
+        assert out.shape == (0,)                  # nothing ever commits
+        sizes.append(sess.live_state_bytes())
+    assert all(b >= a for a, b in zip(sizes, sizes[1:]))
+    assert sizes[-1] > sizes[0]
+
+
 def test_stream_left_to_right_alignment_online():
     """Streaming decode of a Bakis model keeps the alignment constraints."""
     k1, k2 = jax.random.split(jax.random.key(7))

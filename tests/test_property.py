@@ -84,6 +84,103 @@ def test_path_states_in_range(prob):
     assert ((0 <= p) & (p < K)).all()
 
 
+# -- BatchScheduler scheduling invariants ------------------------------------
+
+from repro.serving.scheduler import BatchScheduler
+
+_BUCKETS = (16, 64)
+
+
+def _bucket_of(T):
+    return 16 if T <= 16 else 64
+
+
+class _ContractDecoder:
+    """Fake decode_batch_fn that *enforces* the scheduler contract on every
+    call — true lengths alongside the batch, payload rows intact, pad tail
+    zeroed (i.e. never filled from another request, the 'decoded pad frames'
+    failure) — and returns tag-coded results so cross-wired fan-out shows up
+    as a wrong path, not a silent success."""
+
+    def __call__(self, padded, lengths):
+        B, Tb, _ = padded.shape
+        lengths = np.asarray(lengths)
+        assert lengths.shape == (B,)
+        assert np.all((1 <= lengths) & (lengths <= Tb))
+        tags = padded[:, 0, 0].astype(np.int64)
+        for i in range(B):
+            assert tags[i] > 0
+            assert np.all(padded[i, :lengths[i]] == tags[i])
+            assert np.all(padded[i, lengths[i]:] == 0.0)
+        paths = np.repeat(tags[:, None], Tb, axis=1)
+        return paths, tags.astype(np.float64)
+
+
+_SCHED_ACTIONS = st.one_of(
+    st.tuples(st.just("submit"), st.sampled_from([3, 12, 16, 29, 60])),
+    st.just(("step",)),
+    st.just(("drain",)),
+)
+
+
+@given(st.lists(_SCHED_ACTIONS, max_size=30))
+@settings(**_SETTINGS)
+def test_scheduler_exactly_once_under_interleaving(ops):
+    """INVARIANTS under arbitrary submit/step/drain interleavings: every
+    request completes exactly once with the result routed back to it (right
+    length, right tag), pad frames are never decoded (enforced inside the
+    fake decoder), and the queue is empty after the final drain."""
+    sched = BatchScheduler(_ContractDecoder(), max_batch=3, buckets=_BUCKETS)
+    submitted = []                       # (scheduler rid, tag, T)
+    completed = []
+    for op in ops:
+        if op[0] == "submit":
+            tag = float(len(submitted) + 1)
+            req = sched.submit(np.full((op[1], 4), tag, np.float32))
+            submitted.append((req.rid, tag, op[1]))
+        elif op[0] == "step":
+            completed.extend(sched.step())
+        else:
+            completed.extend(sched.drain())
+    completed.extend(sched.drain())
+    assert not sched.queue
+
+    assert sorted(r.rid for r in completed) == [r for r, _, _ in submitted]
+    by_rid = {rid: (tag, T) for rid, tag, T in submitted}
+    for r in completed:
+        tag, T = by_rid[r.rid]
+        path, score = r.result
+        assert r.done
+        assert path.shape == (T,)
+        assert np.all(path == int(tag))
+        assert score == tag
+
+
+@given(st.lists(_SCHED_ACTIONS, max_size=30))
+@settings(**_SETTINGS)
+def test_scheduler_preserves_per_bucket_order(ops):
+    """INVARIANT: within a length bucket, requests complete in submission
+    order, no matter how submits and steps interleave (steps pack the front
+    request's bucket, skipping — but never reordering — the others)."""
+    sched = BatchScheduler(_ContractDecoder(), max_batch=3, buckets=_BUCKETS)
+    submitted = []
+    completed = []
+    for op in ops:
+        if op[0] == "submit":
+            tag = float(len(submitted) + 1)
+            req = sched.submit(np.full((op[1], 4), tag, np.float32))
+            submitted.append((req.rid, tag, op[1]))
+        elif op[0] == "step":
+            completed.extend(sched.step())
+        else:
+            completed.extend(sched.drain())
+    completed.extend(sched.drain())
+    for b in _BUCKETS:
+        want = [rid for rid, _, T in submitted if _bucket_of(T) == b]
+        got = [r.rid for r in completed if _bucket_of(len(r.payload)) == b]
+        assert got == want
+
+
 @given(st.integers(0, 2**16))
 @settings(**_SETTINGS)
 def test_emission_shift_invariance(seed):
