@@ -5,7 +5,17 @@ PY ?= python
 
 .PHONY: test test-fast test-dist test-drills bench bench-smoke \
 	example-quickstart example-streaming example-batch example-adaptive \
-	serve-smoke loadtest-smoke
+	serve-smoke loadtest-smoke lint lint-fast
+
+lint:  # the full gate: flashlint (AST rules + contracts + retrace), then ruff/mypy if installed
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis
+	@if command -v ruff >/dev/null 2>&1; then ruff check .; \
+	else echo "ruff not installed (pip install -e '.[lint]'); skipping"; fi
+	@if command -v mypy >/dev/null 2>&1; then mypy; \
+	else echo "mypy not installed (pip install -e '.[lint]'); skipping"; fi
+
+lint-fast:  # sub-second AST pass only (what pre-commit runs)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis --lint-only
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q

@@ -10,7 +10,6 @@ budget accounting."""
 
 from __future__ import annotations
 
-import numpy as np
 
 from .common import emit
 

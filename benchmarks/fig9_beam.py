@@ -3,7 +3,6 @@
 
 from __future__ import annotations
 
-import numpy as np
 import jax
 
 from repro.core import (left_to_right_hmm, random_emissions, viterbi_vanilla,

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro.core import (left_to_right_hmm, random_emissions, viterbi_vanilla,
                         viterbi_checkpoint, flash_viterbi, flash_bs_viterbi,

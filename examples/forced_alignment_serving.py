@@ -12,7 +12,7 @@ import jax.numpy as jnp
 
 from repro.configs import get_arch
 from repro.models import build_model
-from repro.core import left_to_right_hmm, viterbi_vanilla, relative_error
+from repro.core import left_to_right_hmm
 from repro.serving.scheduler import BatchScheduler
 
 # 1. encoder (reduced hubert on CPU; the full config runs on the pod)

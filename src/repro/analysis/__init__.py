@@ -1,0 +1,51 @@
+"""flashlint — static analysis that gates the decode stack.
+
+Three layers, one CLI (``python -m repro.analysis``, ``make lint``):
+
+  * `analysis.lint` — an AST project linter with repo-specific rules
+    (FL001..FL005): raw jax mesh/shard_map API outside `runtime/jaxcompat`,
+    host-sync primitives in the jit-reachable decode hot paths, `sys.path`
+    manipulation, and legacy string-dispatch `viterbi_decode` outside the
+    pinned shim.  Intentional exceptions are documented in place with
+    ``# flashlint: disable=FL002(reason)`` comments.
+
+  * `analysis.contracts` — a trace-time contract checker: every registered
+    `DecodeSpec` is run under `jax.eval_shape` over a (K, T, B) grid (no
+    execution) asserting output shapes/dtypes/weak-types, and the planner's
+    `decoder_state_bytes` cost model is cross-checked against the compiled
+    executables' `memory_analysis()` within pinned per-method tolerances so
+    the budget -> plan ladder can never silently underestimate footprint.
+
+  * `analysis.retrace` — a recompilation detector over `ViterbiDecoder`'s
+    spec-keyed jit caches: repeated calls with an equal spec, or ragged
+    lengths within one shape bucket, must never trigger a retrace.
+"""
+
+from __future__ import annotations
+
+from .lint import RULES, Violation, lint_file, lint_paths, lint_source
+
+__all__ = [
+    "RULES", "Violation", "lint_source", "lint_file", "lint_paths",
+    "ContractError", "ContractReport", "MEMORY_TOLERANCE",
+    "check_contracts", "compiled_state_bytes",
+    "RetraceError", "RetraceGuard", "check_retrace",
+]
+
+# contracts/retrace pull in jax; load them lazily (PEP 562) so the AST-only
+# pre-commit path (`python -m repro.analysis --lint-only`) stays sub-second.
+_LAZY = {
+    "ContractError": "contracts", "ContractReport": "contracts",
+    "MEMORY_TOLERANCE": "contracts", "check_contracts": "contracts",
+    "compiled_state_bytes": "contracts",
+    "RetraceError": "retrace", "RetraceGuard": "retrace",
+    "check_retrace": "retrace",
+}
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

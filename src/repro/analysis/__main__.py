@@ -1,0 +1,102 @@
+"""CLI for the flashlint gate: ``python -m repro.analysis`` / ``make lint``.
+
+Runs the three layers in order — AST lint, trace-time contracts, retrace
+battery — and exits non-zero if any layer fails.  Layer selection flags exist
+so pre-commit can run the sub-second lint alone while CI runs everything.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+
+def _default_paths() -> list[pathlib.Path]:
+    # the installed/in-tree `repro` package itself — `src/` when run from a
+    # checkout, site-packages when run from an install; either way the gate
+    # covers every module the decode stack ships.
+    return [pathlib.Path(__file__).resolve().parent.parent]
+
+
+def _run_lint(paths: list[pathlib.Path]) -> int:
+    from .lint import lint_paths
+    violations, n_files = lint_paths(paths)
+    for v in violations:
+        print(v)
+    status = "clean" if not violations else f"{len(violations)} violation(s)"
+    print(f"flashlint: {n_files} file(s) checked, {status}")
+    return 1 if violations else 0
+
+
+def _run_contracts(quick: bool) -> int:
+    from .contracts import check_contracts
+    report = check_contracts(quick=quick)
+    for line in report.failures:
+        print(f"CONTRACT FAIL: {line}")
+    for line in report.skipped:
+        print(f"contract skipped: {line}")
+    if report.memory_ratios:
+        worst = max(report.memory_ratios.items(), key=lambda kv: kv[1])
+        (method, K, T), ratio = worst
+        print(f"contracts: {len(report.checks)} check(s) passed, "
+              f"{len(report.failures)} failed; worst compiled/model memory "
+              f"ratio {ratio:.2f}x ({method}, K={K}, T={T})")
+    else:
+        print(f"contracts: {len(report.checks)} check(s) passed, "
+              f"{len(report.failures)} failed")
+    return 0 if report.ok else 1
+
+
+def _run_retrace() -> int:
+    from .retrace import RetraceError, check_retrace
+    try:
+        passed = check_retrace()
+    except RetraceError as e:
+        print(f"RETRACE FAIL: {e}")
+        return 1
+    for line in passed:
+        print(f"retrace: {line}")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="flashlint: AST lint + trace-time contracts + retrace "
+                    "guard for the decode stack")
+    ap.add_argument("paths", nargs="*", type=pathlib.Path,
+                    help="files/directories to lint (default: the repro "
+                         "package)")
+    only = ap.add_mutually_exclusive_group()
+    only.add_argument("--lint-only", action="store_true",
+                      help="run just the AST linter (sub-second; what "
+                           "pre-commit runs)")
+    only.add_argument("--contracts-only", action="store_true",
+                      help="run just the trace-time contract checker")
+    only.add_argument("--retrace-only", action="store_true",
+                      help="run just the recompilation battery")
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink the contract grids to one point each")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        from .lint import RULES
+        for code, summary in sorted(RULES.items()):
+            print(f"{code}  {summary}")
+        return 0
+
+    rc = 0
+    if not (args.contracts_only or args.retrace_only):
+        rc |= _run_lint([p for p in (args.paths or _default_paths())])
+    if not (args.lint_only or args.retrace_only):
+        rc |= _run_contracts(quick=args.quick)
+    if not (args.lint_only or args.contracts_only):
+        rc |= _run_retrace()
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

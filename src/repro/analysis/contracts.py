@@ -1,0 +1,299 @@
+"""Trace-time contract checker for every registered `DecodeSpec`.
+
+Three families of contracts, none of which execute a decode on real data:
+
+  * **Shape/dtype contracts** — every offline (jittable) spec is traced with
+    `jax.eval_shape` over a (K, T) grid, and every batchable spec over a
+    (K, T, B) grid with ragged lengths: paths must be int32 of the right
+    shape, scores float32, nothing may be weakly typed, and float64 must not
+    leak anywhere into the outputs.
+
+  * **Memory cross-check** — the planner's analytic `decoder_state_bytes`
+    model is what the budget -> plan ladder trusts (`core/planner.py`); if a
+    kernel change makes the compiled program allocate asymptotically more
+    than the model claims, the ladder silently under-budgets.  For each spec
+    and grid point we compile the decode (`jit(...).lower(...).compile()`)
+    and assert ``memory_analysis().temp_size_in_bytes <= model x tolerance``
+    with the per-method tolerances pinned in `MEMORY_TOLERANCE`.  The
+    tolerances absorb a known, measured constant: XLA's CPU backend
+    materialises whole wavefront transients that the TPU pipeline streams
+    (flash/flash_bs carry the largest pinned ratio for that reason); the
+    gate exists to catch *drift* beyond that envelope, and the compiled
+    module is also cross-parsed with `launch/hlo_cost.py` as a sanity check.
+
+  * **Streaming contracts** — the online decoders are stateful host loops
+    (not traceable), so their contract is checked live on a tiny stream:
+    committed paths are int32 and complete, and the *measured* peak
+    `live_state_bytes()` never exceeds the planner model (the model is a
+    worst-case bound, so exceeding it means the cost model drifted from the
+    implementation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spec import (AssocSpec, BeamStaticMPSpec, BeamStaticSpec,
+                             CheckpointSpec, DecodeSpec, FlashBSSpec,
+                             FlashSpec, FusedSpec, OnlineBeamSpec, OnlineSpec,
+                             SPEC_BY_METHOD, VanillaSpec)
+from repro.core.planner import spec_state_bytes
+
+__all__ = [
+    "TRACEABLE_SPECS", "STREAMING_SPECS", "SHAPE_GRID", "BATCH_GRID",
+    "MEMORY_GRID", "MEMORY_TOLERANCE", "ContractError", "ContractReport",
+    "check_contracts", "check_shape_contracts", "check_memory_contracts",
+    "check_streaming_contracts", "compiled_state_bytes",
+]
+
+#: One default-constructed instance per registered offline (jittable) method.
+TRACEABLE_SPECS: tuple[DecodeSpec, ...] = (
+    VanillaSpec(), CheckpointSpec(), FlashSpec(), FlashBSSpec(),
+    BeamStaticSpec(), BeamStaticMPSpec(), AssocSpec(), FusedSpec())
+
+#: The stateful streaming methods (checked live, not traced).
+STREAMING_SPECS: tuple[DecodeSpec, ...] = (
+    OnlineSpec(stream_chunk=16), OnlineBeamSpec(stream_chunk=16))
+
+SHAPE_GRID: tuple[tuple[int, int], ...] = ((8, 16), (24, 64), (64, 256))
+BATCH_GRID: tuple[tuple[int, int, int], ...] = ((16, 32, 3), (24, 48, 5))
+MEMORY_GRID: tuple[tuple[int, int], ...] = ((24, 64), (64, 256))
+
+#: Pinned ceilings for compiled_temp / model, per method, over MEMORY_GRID
+#: (measured on the CPU backend at jax 0.4.37, ~2x headroom; see module
+#: docstring for why flash's wavefront transients dominate off-TPU).
+MEMORY_TOLERANCE: dict[str, float] = {
+    "vanilla": 8.0,
+    "checkpoint": 16.0,
+    "flash": 96.0,
+    "flash_bs": 64.0,
+    "beam_static": 4.0,
+    "beam_static_mp": 96.0,
+    "assoc": 64.0,
+    "fused": 8.0,
+}
+
+
+class ContractError(AssertionError):
+    """A decode-stack contract does not hold."""
+
+
+@dataclasses.dataclass
+class ContractReport:
+    checks: list[str] = dataclasses.field(default_factory=list)
+    failures: list[str] = dataclasses.field(default_factory=list)
+    skipped: list[str] = dataclasses.field(default_factory=list)
+    #: (method, K, T) -> compiled_temp / model ratio from the memory pass.
+    memory_ratios: dict[tuple[str, int, int], float] = dataclasses.field(
+        default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+    def raise_if_failed(self) -> None:
+        if self.failures:
+            raise ContractError(
+                f"{len(self.failures)} contract violation(s):\n  "
+                + "\n  ".join(self.failures))
+
+
+def _abstract_hmm(K: int, T: int):
+    return (jax.ShapeDtypeStruct((K,), jnp.float32),
+            jax.ShapeDtypeStruct((K, K), jnp.float32),
+            jax.ShapeDtypeStruct((T, K), jnp.float32))
+
+
+def _expect(report: ContractReport, what: str, cond: bool, detail: str):
+    if cond:
+        report.checks.append(what)
+    else:
+        report.failures.append(f"{what}: {detail}")
+
+
+def _check_pair(report: ContractReport, label: str, out, path_shape,
+                score_shape):
+    path, score = out
+    _expect(report, f"{label} path", tuple(path.shape) == tuple(path_shape)
+            and path.dtype == jnp.int32
+            and not getattr(path, "weak_type", False),
+            f"got shape={tuple(path.shape)} dtype={path.dtype} "
+            f"weak_type={getattr(path, 'weak_type', False)}; want "
+            f"{tuple(path_shape)} int32 strong")
+    _expect(report, f"{label} score",
+            tuple(score.shape) == tuple(score_shape)
+            and score.dtype == jnp.float32
+            and not getattr(score, "weak_type", False),
+            f"got shape={tuple(score.shape)} dtype={score.dtype} "
+            f"weak_type={getattr(score, 'weak_type', False)}; want "
+            f"{tuple(score_shape)} float32 strong")
+
+
+# ---------------------------------------------------------------------------
+# Shape/dtype contracts (pure tracing)
+# ---------------------------------------------------------------------------
+
+def check_shape_contracts(specs: Sequence[DecodeSpec] = TRACEABLE_SPECS,
+                          grid: Sequence[tuple[int, int]] = SHAPE_GRID,
+                          batch_grid: Sequence[tuple[int, int, int]]
+                          = BATCH_GRID,
+                          report: ContractReport | None = None
+                          ) -> ContractReport:
+    report = report if report is not None else ContractReport()
+    for spec in specs:
+        for K, T in grid:
+            label = f"eval_shape[{spec.method} K={K} T={T}]"
+            pi, A, em = _abstract_hmm(K, T)
+            try:
+                out = jax.eval_shape(spec.run, pi, A, em)
+            except Exception as e:  # tracing itself must not fail
+                report.failures.append(f"{label}: trace error {e!r}")
+                continue
+            _check_pair(report, label, out, (T,), ())
+        if spec.batch_method is None:
+            continue
+        from repro.core.batch import viterbi_decode_batch
+        for K, T, B in batch_grid:
+            label = f"eval_shape[{spec.method} batch K={K} T={T} B={B}]"
+            pi, A, em = _abstract_hmm(K, T)
+            em_b = jax.ShapeDtypeStruct((B, T, K), jnp.float32)
+            # ragged on purpose: every row a different true length
+            lengths = jnp.asarray([(i % T) + 1 for i in range(B)], jnp.int32)
+            tun = spec.batch_tunables()
+
+            def run_batch(em_, pi_, A_, spec=spec, lengths=lengths, tun=tun):
+                return viterbi_decode_batch(em_, pi_, A_, lengths,
+                                            method=spec.batch_method, **tun)
+            try:
+                out = jax.eval_shape(run_batch, em_b, pi, A)
+            except Exception as e:
+                report.failures.append(f"{label}: trace error {e!r}")
+                continue
+            _check_pair(report, label, out, (B, T), (B,))
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Memory cross-check (compile, never execute)
+# ---------------------------------------------------------------------------
+
+def compiled_state_bytes(spec: DecodeSpec, K: int, T: int) -> int | None:
+    """Temp bytes the compiled single-sequence decode allocates, or None if
+    this jax/backend does not expose `memory_analysis()`."""
+    pi, A, em = _abstract_hmm(K, T)
+    compiled = jax.jit(spec.run).lower(pi, A, em).compile()
+    try:
+        mem = compiled.memory_analysis()
+        return int(mem.temp_size_in_bytes)
+    except (AttributeError, NotImplementedError, jax.errors.JaxRuntimeError):
+        return None
+
+
+def check_memory_contracts(specs: Sequence[DecodeSpec] = TRACEABLE_SPECS,
+                           grid: Sequence[tuple[int, int]] = MEMORY_GRID,
+                           report: ContractReport | None = None
+                           ) -> ContractReport:
+    report = report if report is not None else ContractReport()
+    from repro.launch.hlo_cost import analyze_text
+    for spec in specs:
+        tol = MEMORY_TOLERANCE.get(spec.method)
+        if tol is None:
+            report.failures.append(
+                f"memory[{spec.method}]: no pinned tolerance in "
+                f"MEMORY_TOLERANCE — add one")
+            continue
+        for K, T in grid:
+            label = f"memory[{spec.method} K={K} T={T}]"
+            pi, A, em = _abstract_hmm(K, T)
+            compiled = jax.jit(spec.run).lower(pi, A, em).compile()
+            try:
+                temp = int(compiled.memory_analysis().temp_size_in_bytes)
+            except (AttributeError, NotImplementedError,
+                    jax.errors.JaxRuntimeError):
+                report.skipped.append(
+                    f"{label}: memory_analysis unavailable on this backend")
+                continue
+            model = spec_state_bytes(spec, K, T)
+            ratio = temp / max(model, 1)
+            report.memory_ratios[(spec.method, K, T)] = ratio
+            _expect(report, label, temp <= model * tol,
+                    f"compiled temp {temp:,}B > model {model:,}B x "
+                    f"tolerance {tol} — the planner would under-budget "
+                    f"this spec")
+            # sanity: the module parses under the roofline cost walker
+            cost = analyze_text(compiled.as_text())
+            _expect(report, f"{label} hlo-cost", cost.flops > 0,
+                    "hlo_cost.analyze_text saw no flops in the compiled "
+                    "module (parser drift?)")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Streaming (stateful) contracts — tiny live run
+# ---------------------------------------------------------------------------
+
+def check_streaming_contracts(specs: Sequence[DecodeSpec] = STREAMING_SPECS,
+                              K: int = 16, T: int = 48, seed: int = 0,
+                              report: ContractReport | None = None
+                              ) -> ContractReport:
+    report = report if report is not None else ContractReport()
+    rng = np.random.default_rng(seed)
+    log_pi = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(K,)), jnp.float32))
+    log_A = jax.nn.log_softmax(
+        jnp.asarray(rng.normal(size=(K, K)), jnp.float32), axis=1)
+    em = jnp.asarray(rng.normal(size=(T, K)), jnp.float32)
+    for spec in specs:
+        label = f"streaming[{spec.method} K={K} T={T}]"
+        dec = spec.make_streaming(log_pi, log_A)
+        chunk = getattr(spec, "stream_chunk", 16)
+        peak = 0
+        for s in range(0, T, chunk):
+            dec.feed(em[s:s + chunk])
+            peak = max(peak, dec.live_state_bytes())
+        dec.flush()
+        path = dec.path
+        _expect(report, f"{label} path",
+                path.shape == (T,) and path.dtype == np.int32,
+                f"got shape={path.shape} dtype={path.dtype}; want ({T},) "
+                f"int32")
+        model = spec_state_bytes(spec, K, T)
+        _expect(report, f"{label} live-state",
+                peak <= model,
+                f"measured peak live state {peak:,}B exceeds the planner "
+                f"model {model:,}B — decoder_state_bytes({spec.method!r}) "
+                f"drifted from the implementation")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# Aggregate entry point
+# ---------------------------------------------------------------------------
+
+def check_contracts(quick: bool = False) -> ContractReport:
+    """Run every contract family over every registered spec.
+
+    ``quick`` shrinks the grids to one point each (pre-commit latency);
+    the full grid is what CI and `make lint` run.
+    """
+    # keep the registry honest: every method must be covered by one family
+    covered = ({s.method for s in TRACEABLE_SPECS}
+               | {s.method for s in STREAMING_SPECS})
+    report = ContractReport()
+    missing = set(SPEC_BY_METHOD) - covered
+    _expect(report, "registry coverage", not missing,
+            f"methods {sorted(missing)} registered in SPEC_BY_METHOD but "
+            f"not covered by the contract checker")
+    shape_grid = SHAPE_GRID[:1] if quick else SHAPE_GRID
+    batch_grid = BATCH_GRID[:1] if quick else BATCH_GRID
+    mem_grid = MEMORY_GRID[:1] if quick else MEMORY_GRID
+    check_shape_contracts(grid=shape_grid, batch_grid=batch_grid,
+                          report=report)
+    check_memory_contracts(grid=mem_grid, report=report)
+    check_streaming_contracts(report=report)
+    return report

@@ -1,0 +1,385 @@
+"""flashlint rules — the AST project linter behind ``python -m repro.analysis``.
+
+Rule catalogue (see `RULES`):
+
+  FL001  raw jax mesh/shard_map API (``jax.shard_map``,
+         ``jax.experimental.shard_map``, ``jax.make_mesh``,
+         ``jax.sharding.AbstractMesh``) anywhere except
+         ``runtime/jaxcompat.py``.  Those surfaces drift across jax releases;
+         PR 3 resurrected the whole distributed subsystem by funnelling them
+         through the compat shim, and this rule keeps it that way.
+
+  FL002  host-sync primitives inside the jit-reachable decode hot paths
+         (``core/`` and ``kernels/``): ``.item()``, ``jax.device_get``,
+         ``jax.block_until_ready``, ``np.asarray``/``np.array`` (device ->
+         host copies), and ``float()``/``int()``/``bool()`` applied to an
+         expression that mentions a traced value (a ``jnp.``/``jax.`` call
+         chain, or a subscript of decoder state on ``self``).  Static shape
+         metadata (``.shape``/``.ndim``/``.dtype``) is exempt.  Intentional
+         syncs — the online decoders' commit points — carry a reasoned
+         disable comment instead of being silent.
+
+  FL003  ``sys.path`` manipulation (removed repo-wide in PR 4; this keeps it
+         out).
+
+  FL004  legacy string-dispatch ``viterbi_decode(method=...)`` anywhere
+         except the pinned deprecation shim (``core/api.py``) and tests.
+         New call sites must construct a typed `DecodeSpec`.
+
+  FL005  malformed ``flashlint: disable`` comment (unknown rule code or
+         missing reason) — a disable that does not say *why* suppresses
+         nothing.
+
+Suppression grammar, one or more comma-separated entries::
+
+    x = float(delta[q])  # flashlint: disable=FL002(commit-point transfer)
+    # flashlint: disable=FL002(applies to the next line)
+    y = np.asarray(psi)
+    # flashlint: disable-file=FL002(whole file is host-side numpy)
+
+The reason inside ``(...)`` is mandatory.  ``disable-file`` may appear on any
+standalone comment line and silences the rule for the entire file.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Iterable, Iterator
+
+__all__ = ["RULES", "Violation", "lint_source", "lint_file", "lint_paths"]
+
+RULES: dict[str, str] = {
+    "FL001": "raw jax mesh/shard_map API outside runtime/jaxcompat.py",
+    "FL002": "host-sync primitive in a jit-reachable decode hot path",
+    "FL003": "sys.path manipulation",
+    "FL004": "string-dispatch viterbi_decode outside the shim and tests",
+    "FL005": "malformed flashlint disable comment",
+}
+
+# FL001 — exact dotted names that must stay inside the compat shim.
+_FL001_DOTTED = {
+    "jax.shard_map",
+    "jax.make_mesh",
+    "jax.sharding.AbstractMesh",
+    "jax.experimental.shard_map",
+    "jax.experimental.shard_map.shard_map",
+}
+_FL001_FROM = {
+    ("jax", "shard_map"),
+    ("jax", "make_mesh"),
+    ("jax.sharding", "AbstractMesh"),
+    ("jax.experimental.shard_map", "shard_map"),
+}
+
+# FL002 — dotted call targets that always force a device->host sync, and
+# attribute chains through these never refer to device data (static metadata).
+_FL002_SYNC_CALLS = {
+    "jax.device_get", "jax.block_until_ready",
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+}
+_STATIC_ATTRS = {"shape", "ndim", "dtype", "weak_type", "sharding"}
+_TRACED_ROOTS = {"jnp", "jax"}
+
+_DISABLE_ITEM = re.compile(r"(?P<code>[A-Z]{2}\d{3})\((?P<reason>[^()]*)\)")
+_DISABLE_LINE = re.compile(
+    r"#\s*flashlint:\s*(?P<kind>disable(?:-file)?)\s*=\s*(?P<body>\S.*)")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    path: str
+    line: int
+    col: int
+    code: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.code} {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# Scope decisions (which rules apply to which files)
+# ---------------------------------------------------------------------------
+
+def _parts(path: str) -> tuple[str, ...]:
+    return pathlib.PurePath(path).parts
+
+
+def _is_jaxcompat(path: str) -> bool:
+    return _parts(path)[-2:] == ("runtime", "jaxcompat.py")
+
+
+def _is_hot_path(path: str) -> bool:
+    """core/ and kernels/ — the jit-reachable decode stack (FL002 scope)."""
+    parts = _parts(path)[:-1]
+    return "core" in parts or "kernels" in parts
+
+
+def _is_dispatch_shim(path: str) -> bool:
+    return _parts(path)[-2:] == ("core", "api.py")
+
+
+def _is_test_file(path: str) -> bool:
+    parts = _parts(path)
+    return ("tests" in parts[:-1] or parts[-1].startswith("test_")
+            or parts[-1] == "conftest.py")
+
+
+# ---------------------------------------------------------------------------
+# Disable-comment parsing
+# ---------------------------------------------------------------------------
+
+def _parse_disables(src: str, path: str):
+    """Returns (line -> {codes}, file-wide {codes}, FL005 violations).
+
+    A disable on a code-bearing line covers that line; a disable on a
+    standalone comment line covers the next line (for statements too long to
+    carry the comment).  Only real COMMENT tokens count — strings and
+    docstrings may mention the grammar without tripping FL005.
+    """
+    per_line: dict[int, set[str]] = {}
+    file_wide: set[str] = set()
+    bad: list[Violation] = []
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(src).readline))
+    except (tokenize.TokenError, IndentationError, SyntaxError):
+        return per_line, file_wide, bad   # ast.parse reports the real error
+    for tok in tokens:
+        if tok.type != tokenize.COMMENT:
+            continue
+        text, lineno = tok.string, tok.start[0]
+        m = _DISABLE_LINE.search(text)
+        if not m:
+            if "flashlint" in text and "disable" in text:
+                bad.append(Violation(path, lineno, 1, "FL005",
+                                     "unparseable flashlint disable comment"))
+            continue
+        codes: set[str] = set()
+        body = m.group("body")
+        matched_spans = []
+        for item in _DISABLE_ITEM.finditer(body):
+            matched_spans.append(item.span())
+            code, reason = item.group("code"), item.group("reason").strip()
+            if code not in RULES:
+                bad.append(Violation(path, lineno, 1, "FL005",
+                                     f"unknown rule {code!r} in disable"))
+            elif not reason:
+                bad.append(Violation(
+                    path, lineno, 1, "FL005",
+                    f"disable of {code} has an empty reason; say why"))
+            else:
+                codes.add(code)
+        leftover = _DISABLE_ITEM.sub("", body).strip().strip(",")
+        if leftover and not leftover.startswith("#"):
+            bad.append(Violation(
+                path, lineno, 1, "FL005",
+                f"malformed disable {leftover!r}; use CODE(reason)"))
+        standalone = tok.line[:tok.start[1]].strip() == ""
+        if m.group("kind") == "disable-file":
+            file_wide |= codes
+        elif standalone:
+            per_line.setdefault(lineno + 1, set()).update(codes)
+        else:
+            per_line.setdefault(lineno, set()).update(codes)
+    return per_line, file_wide, bad
+
+
+# ---------------------------------------------------------------------------
+# AST helpers
+# ---------------------------------------------------------------------------
+
+def _dotted(node: ast.AST) -> str | None:
+    """'a.b.c' for an attribute chain rooted at a Name, else None."""
+    names: list[str] = []
+    while isinstance(node, ast.Attribute):
+        names.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        names.append(node.id)
+        return ".".join(reversed(names))
+    return None
+
+
+def _chain_root(node: ast.AST) -> str | None:
+    """Root Name of an attribute/subscript/call chain, else None."""
+    while True:
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Name):
+            return node.id
+        else:
+            return None
+
+
+def _mentions_traced(node: ast.AST) -> bool:
+    """Does this expression plausibly touch a traced/device value?
+
+    True for jnp./jax.-rooted call chains and for subscripts of state held on
+    ``self`` (the streaming decoders keep their live jax arrays there).
+    Attribute chains through static metadata (.shape/.ndim/.dtype) are host
+    Python and never count.
+    """
+    if isinstance(node, ast.Attribute):
+        if node.attr in _STATIC_ATTRS:
+            return False
+        root = _chain_root(node)
+        return root in _TRACED_ROOTS or _mentions_traced(node.value)
+    if isinstance(node, ast.Subscript):
+        return _mentions_traced(node.value) or _mentions_traced(node.slice)
+    if isinstance(node, ast.Call):
+        if any(_mentions_traced(a) for a in node.args):
+            return True
+        if any(_mentions_traced(k.value) for k in node.keywords):
+            return True
+        return _mentions_traced(node.func)
+    if isinstance(node, ast.Name):
+        return node.id == "self"
+    if isinstance(node, ast.BinOp):
+        return _mentions_traced(node.left) or _mentions_traced(node.right)
+    if isinstance(node, ast.UnaryOp):
+        return _mentions_traced(node.operand)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_mentions_traced(e) for e in node.elts)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# The visitor
+# ---------------------------------------------------------------------------
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.check_fl001 = not _is_jaxcompat(path)
+        self.check_fl002 = _is_hot_path(path)
+        self.check_fl004 = not (_is_dispatch_shim(path)
+                                or _is_test_file(path))
+        self.found: list[Violation] = []
+
+    def _flag(self, node: ast.AST, code: str, message: str) -> None:
+        self.found.append(Violation(self.path, getattr(node, "lineno", 1),
+                                    getattr(node, "col_offset", 0) + 1,
+                                    code, message))
+
+    # -- imports (FL001) ----------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        if self.check_fl001:
+            for alias in node.names:
+                if alias.name in _FL001_DOTTED:
+                    self._flag(node, "FL001",
+                               f"import of {alias.name}; use "
+                               f"repro.runtime.jaxcompat instead")
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        if self.check_fl001 and node.module:
+            for alias in node.names:
+                if (node.module, alias.name) in _FL001_FROM:
+                    self._flag(node, "FL001",
+                               f"'from {node.module} import {alias.name}'; "
+                               f"use repro.runtime.jaxcompat instead")
+        self.generic_visit(node)
+
+    # -- attribute references (FL001, FL003) --------------------------------
+    def visit_Attribute(self, node: ast.Attribute) -> None:
+        dotted = _dotted(node)
+        if dotted:
+            if self.check_fl001 and dotted in _FL001_DOTTED:
+                self._flag(node, "FL001",
+                           f"raw {dotted}; use repro.runtime.jaxcompat "
+                           f"instead")
+            # exact match only: for `sys.path.insert(...)` the inner
+            # `sys.path` Attribute node is visited too, so one flag suffices
+            if dotted == "sys.path":
+                self._flag(node, "FL003",
+                           "sys.path manipulation; use PYTHONPATH=src or an "
+                           "editable install")
+        self.generic_visit(node)
+
+    # -- calls (FL002, FL004) -----------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        if self.check_fl002:
+            if (isinstance(func, ast.Attribute) and func.attr == "item"
+                    and not node.args and not node.keywords):
+                self._flag(node, "FL002",
+                           ".item() forces a device sync; keep scalars on "
+                           "device or annotate the commit point")
+            dotted = _dotted(func) if isinstance(func, ast.Attribute) else None
+            if dotted in _FL002_SYNC_CALLS:
+                self._flag(node, "FL002",
+                           f"{dotted}() is a device->host transfer in a "
+                           f"decode hot path")
+            if (isinstance(func, ast.Name)
+                    and func.id in ("float", "int", "bool")
+                    and len(node.args) == 1
+                    and _mentions_traced(node.args[0])):
+                self._flag(node, "FL002",
+                           f"{func.id}() on a traced value blocks on the "
+                           f"device; batch the transfer or annotate it")
+        if self.check_fl004:
+            name = (func.id if isinstance(func, ast.Name)
+                    else func.attr if isinstance(func, ast.Attribute)
+                    else None)
+            if name in ("viterbi_decode", "viterbi_decode_hmm"):
+                self._flag(node, "FL004",
+                           f"legacy {name}(method=...) dispatch; construct "
+                           f"a typed DecodeSpec / ViterbiDecoder")
+        self.generic_visit(node)
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def lint_source(src: str, path: str = "<string>") -> list[Violation]:
+    """Lint one module's source text; `path` drives rule scoping."""
+    per_line, file_wide, bad = _parse_disables(src, path)
+    try:
+        tree = ast.parse(src)
+    except SyntaxError as e:
+        return [Violation(path, e.lineno or 1, (e.offset or 0) + 1, "FL005",
+                          f"syntax error: {e.msg}")]
+    visitor = _Visitor(path)
+    visitor.visit(tree)
+    kept = [v for v in visitor.found
+            if v.code not in file_wide
+            and v.code not in per_line.get(v.line, ())]
+    kept.extend(bad)
+    kept.sort(key=lambda v: (v.line, v.col, v.code))
+    return kept
+
+
+def lint_file(path: str | pathlib.Path) -> list[Violation]:
+    p = pathlib.Path(path)
+    return lint_source(p.read_text(encoding="utf-8"), str(p))
+
+
+def _iter_py(paths: Iterable[str | pathlib.Path]) -> Iterator[pathlib.Path]:
+    for path in paths:
+        p = pathlib.Path(path)
+        if p.is_dir():
+            yield from sorted(q for q in p.rglob("*.py")
+                              if "__pycache__" not in q.parts)
+        else:
+            yield p
+
+
+def lint_paths(paths: Iterable[str | pathlib.Path]
+               ) -> tuple[list[Violation], int]:
+    """Lint files/directories; returns (violations, files checked)."""
+    violations: list[Violation] = []
+    n_files = 0
+    for p in _iter_py(paths):
+        n_files += 1
+        violations.extend(lint_file(p))
+    return violations, n_files

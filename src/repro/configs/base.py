@@ -16,7 +16,6 @@ The four LM shapes (seq_len x global_batch):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +76,6 @@ def lm_input_specs(cfg: ModelConfig, shape: str, multi_pod: bool = False,
     from repro.sharding.rules import MULTI_POD_RULES, SINGLE_POD_RULES
     rules = MULTI_POD_RULES if multi_pod else SINGLE_POD_RULES
     if B == 1:  # long-context single-stream: batch cannot shard; replicate
-        import copy
         rules = dataclasses.replace(rules, rules={**rules.rules, "batch": None})
     cache_specs = model.cache_specs(rules)
     args = {"tokens": jax.ShapeDtypeStruct((B, 1), i32), "cache": cache}

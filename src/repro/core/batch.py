@@ -63,6 +63,7 @@ def _validate_lengths(lengths: jax.Array, T: int) -> None:
     violation with undefined results.
     """
     try:
+        # flashlint: disable=FL002(eager pre-jit validation of host-side lengths metadata)
         conc = np.asarray(lengths)
     except (jax.errors.TracerArrayConversionError,
             jax.errors.ConcretizationTypeError):

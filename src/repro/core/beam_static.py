@@ -18,7 +18,6 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .hmm import NEG_INF
 from . import flash_bs as _fbs
 
 

@@ -8,9 +8,13 @@ execution shapes the system serves through, uniformly:
     paths, scores = dec.decode_batch(ems, lengths=ln)   # ragged (B, T, K)
     paths, scores = dec.decode_sharded(ems, lengths=ln, mesh=mesh)
 
-Compilation is cached per (spec, shape-bucket): the single-sequence and
-batched entry points each hold one `jax.jit` callable (jit's own cache then
-keys on shapes — one compile per length bucket), and the sharded path reuses
+Compilation is cached per (spec, shape-bucket) in *module-level* jit tables
+keyed by the spec itself (specs are frozen and hashable precisely so they can
+be cache keys): two `ViterbiDecoder`s built from equal specs — e.g. one per
+serving head — share a single compilation, with the HMM tensors passed as
+traced arguments.  jit's own cache then keys on shapes, one compile per
+length bucket; `analysis/retrace.py` fails CI if an equal spec or a ragged
+batch within one bucket ever retraces.  The sharded path reuses
 `core.batch`'s per-(mesh, method, tunables) compiled-decoder cache.  The
 streaming specs (`OnlineSpec`/`OnlineBeamSpec`) are stateful Python loops, so
 they run eagerly and reject the batched entry points.
@@ -22,12 +26,37 @@ shim built from the same tunables — both run the same `spec.run`;
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from .spec import DecodeSpec, as_decode_spec
 
 __all__ = ["ViterbiDecoder"]
+
+
+def _run_spec(spec: DecodeSpec, log_pi, log_A, em):
+    return spec.run(log_pi, log_A, em)
+
+
+def _run_spec_batch(spec: DecodeSpec, em, log_pi, log_A, lengths):
+    from .batch import viterbi_decode_batch
+    return viterbi_decode_batch(em, log_pi, log_A, lengths,
+                                method=spec.batch_method,
+                                **spec.batch_tunables())
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode(spec: DecodeSpec):
+    """Shared single-sequence jit entry for `spec` (spec is the cache key)."""
+    return jax.jit(functools.partial(_run_spec, spec))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode_batch(spec: DecodeSpec):
+    """Shared ragged-batch jit entry for `spec`."""
+    return jax.jit(functools.partial(_run_spec_batch, spec))
 
 
 class ViterbiDecoder:
@@ -37,13 +66,6 @@ class ViterbiDecoder:
         self.spec = as_decode_spec(spec)
         self.log_pi = jnp.asarray(log_pi)
         self.log_A = jnp.asarray(log_A)
-        run = self.spec.run
-        if self.spec.jittable:
-            self._decode_fn = jax.jit(
-                lambda em: run(self.log_pi, self.log_A, em))
-        else:
-            self._decode_fn = lambda em: run(self.log_pi, self.log_A, em)
-        self._batch_fn = None   # built on first decode_batch
 
     def __repr__(self):
         return (f"ViterbiDecoder({self.spec!r}, "
@@ -52,7 +74,10 @@ class ViterbiDecoder:
     # -- single sequence ----------------------------------------------------
     def decode(self, emissions) -> tuple[jax.Array, jax.Array]:
         """Decode one (T, K) sequence -> (path (T,) int32, score)."""
-        return self._decode_fn(jnp.asarray(emissions))
+        em = jnp.asarray(emissions)
+        if self.spec.jittable:
+            return _jit_decode(self.spec)(self.log_pi, self.log_A, em)
+        return self.spec.run(self.log_pi, self.log_A, em)
 
     # -- ragged batch -------------------------------------------------------
     def _require_batchable(self, entry: str) -> str:
@@ -79,15 +104,11 @@ class ViterbiDecoder:
         tropical-identity steps, so `paths[i, :lengths[i]]` is bit-identical
         to `decode(emissions[i, :lengths[i]])` for exact methods.
         """
-        method = self._require_batchable("decode_batch")
-        if self._batch_fn is None:
-            from .batch import viterbi_decode_batch
-            tun = self.spec.batch_tunables()
-            self._batch_fn = jax.jit(
-                lambda em, ln: viterbi_decode_batch(
-                    em, self.log_pi, self.log_A, ln, method=method, **tun))
+        self._require_batchable("decode_batch")
         emissions = jnp.asarray(emissions)
-        return self._batch_fn(emissions, self._lengths(emissions, lengths))
+        lengths = self._lengths(emissions, lengths)
+        return _jit_decode_batch(self.spec)(emissions, self.log_pi,
+                                            self.log_A, lengths)
 
     # -- mesh-sharded batch -------------------------------------------------
     def decode_sharded(self, emissions, lengths=None, *, mesh,

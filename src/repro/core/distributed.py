@@ -36,7 +36,6 @@ this module must keep importing and running on both.
 
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax

@@ -40,7 +40,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .hmm import NEG_INF
 
 
 # ---------------------------------------------------------------------------

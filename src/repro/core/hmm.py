@@ -18,11 +18,9 @@ arithmetic never produces NaNs while remaining far below any reachable path scor
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # Large finite "minus infinity".  T * |NEG_INF| must stay well inside float32 range;
 # 2^20 timesteps * 1e9 = 1e15 << 3.4e38, so even the 500k-step long-context decode

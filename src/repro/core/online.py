@@ -122,6 +122,7 @@ class _StreamingDecoder:
     @property
     def path(self) -> np.ndarray:
         """States committed so far (a prefix of the final decoded path)."""
+        # flashlint: disable=FL002(committed prefix is a host-side python list, no device sync)
         return np.asarray(self._committed, dtype=np.int32)
 
     def _lo(self) -> int:
@@ -175,6 +176,7 @@ class _StreamingDecoder:
         if self.max_lag is not None and self.lag > self.max_lag:
             new += self._force_flush(self.lag - self.max_lag)
         self.stats["peak_lag"] = max(self.stats["peak_lag"], self.lag)
+        # flashlint: disable=FL002(newly committed states are a host list)
         return np.asarray(new, dtype=np.int32)
 
     def flush(self) -> tuple[np.ndarray, float]:
@@ -195,6 +197,7 @@ class _StreamingDecoder:
         self._drop_rows(len(rows))
         self._base = self._t
         self.score = score
+        # flashlint: disable=FL002(flush tail is a host list)
         return np.asarray(seg, dtype=np.int32), score
 
     def _check_open(self, chunk) -> None:
@@ -243,8 +246,10 @@ class OnlineViterbiDecoder(_StreamingDecoder):
             self._psis = [self._psis[0][n:]]
 
     def _frontier_best(self) -> tuple[int, float]:
-        q = int(jnp.argmax(self._delta))
-        return q, float(self._delta[q])
+        # flashlint: disable=FL002(commit point: one batched frontier transfer instead of two scalar syncs)
+        delta = jax.device_get(self._delta)
+        q = int(delta.argmax())
+        return q, float(delta[q])
 
     def _identity_to_state(self, i, ident: int) -> int:
         return int(ident)   # identities *are* states in the exact decoder
@@ -272,6 +277,7 @@ class OnlineViterbiDecoder(_StreamingDecoder):
         if em_chunk.shape[0]:
             psi, self._delta = viterbi_chunk_step(
                 self.log_A, em_chunk, self._delta, bt=self.bt)
+            # flashlint: disable=FL002(window transfer: backpointers feed the host-side convergence scan)
             self._psis.append(np.asarray(psi))
             self._t += int(em_chunk.shape[0])
         return self._after_feed()
@@ -351,10 +357,13 @@ class OnlineBeamDecoder(_StreamingDecoder):
             self._sstates = self._sstates[n:]
 
     def _frontier_best(self) -> tuple[int, float]:
-        b = int(jnp.argmax(self._scores))
-        return b, float(self._scores[b])
+        # flashlint: disable=FL002(commit point: one batched frontier transfer instead of two scalar syncs)
+        scores = jax.device_get(self._scores)
+        b = int(scores.argmax())
+        return b, float(scores[b])
 
     def _identity_to_state(self, i, slot: int) -> int:
+        # flashlint: disable=FL002(window rows are host numpy already, no device sync)
         return int(self._sstates[i][slot])
 
     def _mask_inconsistent(self, f_state: int) -> None:
@@ -379,6 +388,7 @@ class OnlineBeamDecoder(_StreamingDecoder):
         if self._scores is None:
             self._scores, self._states = _beam_init(
                 self.log_pi, em_chunk[0], self.B, self.kchunk)
+            # flashlint: disable=FL002(window transfer: slot states feed the host-side convergence scan)
             self._sstates.append(np.asarray(self._states))
             self._t = 1
             em_chunk = em_chunk[1:]
@@ -386,6 +396,7 @@ class OnlineBeamDecoder(_StreamingDecoder):
             self._scores, self._states, sts, froms = _beam_chunk_scan(
                 self.log_A, em_chunk, self._scores, self._states,
                 self.B, self.kchunk)
+            # flashlint: disable=FL002(window transfer: slot pointers feed the host-side convergence scan)
             sts, froms = np.asarray(sts), np.asarray(froms)
             for r in range(sts.shape[0]):
                 self._sstates.append(sts[r])

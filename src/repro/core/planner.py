@@ -47,8 +47,15 @@ def decoder_state_bytes(method: str, K: int, T: int, P: int = 8,
         return K * 12                            # delta + mid + entry vector
     if method == "flash":
         return P * K * 12 + (P - 1) * K * 4      # P lanes + DivState
-    if method in ("flash_bs", "online_beam"):
+    if method == "flash_bs":
         return P * B * 12 + (P - 1) * B * 4
+    if method == "online_beam":
+        # streaming beam: worst case the commit window never converges, so up
+        # to T slot-pointer rows (state + from, 4B each, per slot) stay live
+        # on top of the O(B) beam carry.  Expected window is O(B log B), but
+        # the planner must bound, not hope (analysis/contracts.py checks the
+        # measured peak never exceeds this).
+        return T * B * 8 + B * 12
     if method == "beam_static":
         return K * 4 + T * B * 8                 # full-K transient + survivors
     if method == "beam_static_mp":

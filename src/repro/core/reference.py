@@ -10,6 +10,8 @@ Two roles:
 
 from __future__ import annotations
 
+# flashlint: disable-file=FL002(pure-numpy oracle: everything here is host-side by design)
+
 import itertools
 
 import numpy as np

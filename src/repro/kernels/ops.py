@@ -8,7 +8,6 @@ compile the real thing).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -31,7 +31,6 @@ program); multiply flops by chip count for machine totals.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from collections import defaultdict, deque
 

@@ -14,7 +14,7 @@ import sys
 from repro.configs import get_arch
 from repro.configs.base import SHAPES
 from repro.launch.model_flops import useful_flops
-from repro.launch.roofline import PEAK_FLOPS, HBM_BW, LINK_BW, LINKS_USED
+from repro.launch.roofline import PEAK_FLOPS
 from repro.models import build_model
 
 _MODEL_CACHE = {}

@@ -23,7 +23,6 @@ from __future__ import annotations
 import dataclasses
 import re
 
-import numpy as np
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # B/s per chip

@@ -14,7 +14,6 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import build_model

@@ -12,17 +12,15 @@ data, supervised restarts (chaos-injectable), straggler logging.
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
 from repro.data.pipeline import SyntheticTokenPipeline, TokenPipelineConfig
 from repro.models import build_model
 from repro.checkpointing.manager import CheckpointManager
-from repro.runtime.fault import SupervisedLoop, StragglerDetector
+from repro.runtime.fault import StragglerDetector
 from repro.optim.adamw import AdamWConfig
 from repro.train import TrainConfig, init_train_state, make_train_step
 

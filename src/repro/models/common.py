@@ -9,7 +9,6 @@ count, so the three can never drift apart.
 from __future__ import annotations
 
 import math
-from typing import Any
 
 import jax
 import jax.numpy as jnp

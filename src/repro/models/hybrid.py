@@ -12,7 +12,6 @@ long_500k decode cells.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

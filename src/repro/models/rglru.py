@@ -18,7 +18,6 @@ Block structure (Griffin recurrent block): two input branches
 from __future__ import annotations
 
 import dataclasses
-import math
 
 import jax
 import jax.numpy as jnp

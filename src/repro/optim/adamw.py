@@ -10,7 +10,6 @@ largest still-replicated axis across ("pod","data") when divisible.  For the
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

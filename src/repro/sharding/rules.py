@@ -17,9 +17,7 @@ Conventions (MaxText-style megatron sharding):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
-import jax
 from jax.sharding import PartitionSpec as P
 
 

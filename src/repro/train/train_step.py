@@ -17,8 +17,6 @@ once.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +46,6 @@ def abstract_train_state(model):
 
 
 def train_state_specs(model, rules, data_size: int):
-    from jax.sharding import PartitionSpec as P
     pspecs = model.param_specs(rules)
     shapes = model.abstract_params()
     data_axes = rules.axis("batch")

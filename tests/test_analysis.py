@@ -1,0 +1,231 @@
+"""Tests for the flashlint gate (`repro.analysis`): rule fixtures, disable
+grammar, self-cleanliness of `src/`, the CI exit-code contract, the
+trace-time contract checker's pinned tolerances, and the retrace guard."""
+
+from __future__ import annotations
+
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (RULES, check_contracts, lint_paths, lint_source,
+                            MEMORY_TOLERANCE, RetraceError, RetraceGuard)
+from repro.analysis.contracts import (check_memory_contracts,
+                                      check_shape_contracts,
+                                      check_streaming_contracts)
+from repro.analysis.retrace import check_retrace, supported
+from repro.core import ViterbiDecoder
+from repro.core.spec import (FlashBSSpec, FlashSpec, FusedSpec, SPEC_BY_METHOD,
+                             VanillaSpec)
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+HOT = "src/repro/core/somefile.py"          # FL002 applies
+COLD = "src/repro/serving/somefile.py"      # FL002 does not
+
+
+def codes(src: str, path: str) -> list[str]:
+    return [v.code for v in lint_source(textwrap.dedent(src), path)]
+
+
+# ---------------------------------------------------------------------------
+# Rule fixtures: positive + negative per rule
+# ---------------------------------------------------------------------------
+
+def test_fl001_raw_mesh_api_flagged_outside_jaxcompat():
+    assert codes("import jax\nm = jax.make_mesh((2,), ('x',))\n",
+                 COLD) == ["FL001"]
+    assert codes("from jax.experimental.shard_map import shard_map\n",
+                 COLD) == ["FL001"]
+    assert codes("import jax\nam = jax.sharding.AbstractMesh((2,), ('x',))\n",
+                 COLD) == ["FL001"]
+
+
+def test_fl001_allowed_inside_jaxcompat_and_via_shim():
+    src = "import jax\nm = jax.make_mesh((2,), ('x',))\n"
+    assert codes(src, "src/repro/runtime/jaxcompat.py") == []
+    assert codes("from repro.runtime.jaxcompat import shard_map\n", COLD) == []
+
+
+def test_fl002_host_syncs_flagged_in_hot_paths_only():
+    fixtures = [
+        "x = delta.item()\n",
+        "import numpy as np\nx = np.asarray(delta)\n",
+        "import jax\nx = jax.device_get(delta)\n",
+        "import jax.numpy as jnp\nx = float(jnp.max(delta))\n",
+        "q = int(self._delta[0])\n",
+    ]
+    for src in fixtures:
+        assert codes(src, HOT) == ["FL002"], src
+        assert codes(src, COLD) == [], src
+
+
+def test_fl002_static_metadata_is_exempt():
+    assert codes("import jax.numpy as jnp\n"
+                 "n = int(jnp.zeros((3,)).shape[0])\n", HOT) == []
+    assert codes("k = int(self.log_A.shape[0])\n", HOT) == []
+
+
+def test_fl003_sys_path_manipulation():
+    assert codes("import sys\nsys.path.insert(0, 'src')\n", COLD) == ["FL003"]
+    assert codes("import sys\nprint(sys.argv)\n", COLD) == []
+
+
+def test_fl004_string_dispatch_outside_shim_and_tests():
+    src = "p, s = viterbi_decode(pi, A, em, method='flash')\n"
+    assert codes(src, COLD) == ["FL004"]
+    assert codes(src, "src/repro/core/api.py") == []
+    assert codes(src, "tests/test_something.py") == []
+
+
+def test_fl005_malformed_disables():
+    assert codes("x = 1  # flashlint: disable=FL999(made up)\n",
+                 COLD) == ["FL005"]
+    # an empty reason is FL005 AND suppresses nothing
+    got = codes("x = delta.item()  # flashlint: disable=FL002()\n", HOT)
+    assert sorted(got) == ["FL002", "FL005"]
+
+
+# ---------------------------------------------------------------------------
+# Disable grammar
+# ---------------------------------------------------------------------------
+
+def test_disable_same_line_and_previous_line():
+    assert codes("x = delta.item()  # flashlint: disable=FL002(commit point)\n",
+                 HOT) == []
+    assert codes("# flashlint: disable=FL002(commit point)\n"
+                 "x = delta.item()\n", HOT) == []
+
+
+def test_disable_requires_reason_and_right_code():
+    # a reasoned FL002 disable does not silence an FL003 on the same line
+    assert codes("import sys\n"
+                 "sys.path.insert(0, 'x')  # flashlint: disable=FL002(nope)\n",
+                 HOT) == ["FL003"]
+
+
+def test_disable_file_silences_whole_module():
+    src = ("# flashlint: disable-file=FL002(host-side oracle)\n"
+           "a = delta.item()\n"
+           "b = other.item()\n")
+    assert codes(src, HOT) == []
+
+
+def test_grammar_in_docstrings_is_not_a_directive():
+    src = '"""Use ``# flashlint: disable=FL002(reason)`` comments."""\n'
+    assert codes(src, HOT) == []
+
+
+# ---------------------------------------------------------------------------
+# Self-clean + exit-code contract
+# ---------------------------------------------------------------------------
+
+def test_src_tree_is_flashlint_clean():
+    violations, n_files = lint_paths([SRC])
+    assert n_files > 50
+    assert violations == [], "\n".join(str(v) for v in violations)
+
+
+def test_cli_exit_codes(tmp_path):
+    # seeded violation in a hot-path-shaped tree -> non-zero exit
+    bad = tmp_path / "core" / "bad.py"
+    bad.parent.mkdir()
+    bad.write_text("import numpy as np\nx = np.asarray(delta)\n")
+    env_src = str(pathlib.Path(__file__).resolve().parent.parent / "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--lint-only",
+         str(tmp_path)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 1, proc.stdout + proc.stderr
+    assert "FL002" in proc.stdout
+    bad.write_text("x = 1\n")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--lint-only",
+         str(tmp_path)],
+        capture_output=True, text=True,
+        env={"PYTHONPATH": env_src, "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# Contract checker
+# ---------------------------------------------------------------------------
+
+def test_every_registered_method_has_contract_coverage():
+    report = check_contracts(quick=True)
+    assert report.ok, "\n".join(report.failures)
+
+
+def test_shape_contracts_small_grid():
+    report = check_shape_contracts(grid=((8, 16),), batch_grid=((8, 16, 3),))
+    assert report.ok, "\n".join(report.failures)
+    assert len(report.checks) > 0
+
+
+def test_memory_tolerance_pinned_for_key_specs():
+    specs = (VanillaSpec(), FlashSpec(), FusedSpec(), FlashBSSpec())
+    report = check_memory_contracts(specs=specs, grid=((24, 64),))
+    assert report.ok, "\n".join(report.failures)
+    for spec in specs:
+        if (spec.method, 24, 64) in report.memory_ratios:
+            ratio = report.memory_ratios[(spec.method, 24, 64)]
+            assert ratio <= MEMORY_TOLERANCE[spec.method]
+
+
+def test_memory_tolerance_table_covers_every_jittable_method():
+    for method, cls in SPEC_BY_METHOD.items():
+        if cls.jittable:
+            assert method in MEMORY_TOLERANCE
+
+
+def test_streaming_live_state_bounded_by_planner_model():
+    report = check_streaming_contracts(K=12, T=32)
+    assert report.ok, "\n".join(report.failures)
+
+
+# ---------------------------------------------------------------------------
+# Retrace guard
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(not supported(), reason="jit._cache_size unavailable")
+def test_no_retrace_battery_passes():
+    passed = check_retrace(specs=(VanillaSpec(),), K=8, T=12)
+    assert any("equal-spec" in p for p in passed)
+    assert any("positive control" in p for p in passed)
+
+
+@pytest.mark.skipif(not supported(), reason="jit._cache_size unavailable")
+def test_guard_catches_a_real_retrace():
+    spec = VanillaSpec()
+    rng = np.random.default_rng(7)
+    dec = ViterbiDecoder(spec, jnp.asarray(rng.standard_normal(8), jnp.float32),
+                         jnp.asarray(rng.standard_normal((8, 8)), jnp.float32))
+    dec.decode(jnp.asarray(rng.standard_normal((10, 8)), jnp.float32))
+    with pytest.raises(RetraceError):
+        with RetraceGuard([spec]):
+            # a brand-new T is a new shape bucket: must be flagged when the
+            # guard allows zero compiles
+            dec.decode(jnp.asarray(rng.standard_normal((11, 8)), jnp.float32))
+
+
+def test_equal_specs_share_one_compilation():
+    if not supported():
+        pytest.skip("jit._cache_size unavailable")
+    from repro.core.decoder import _jit_decode
+    rng = np.random.default_rng(3)
+    pi = jnp.asarray(rng.standard_normal(9), jnp.float32)
+    A = jnp.asarray(rng.standard_normal((9, 9)), jnp.float32)
+    em = jnp.asarray(rng.standard_normal((14, 9)), jnp.float32)
+    spec = FlashSpec(parallelism=2)
+    ViterbiDecoder(spec, pi, A).decode(em)
+    before = _jit_decode(FlashSpec(parallelism=2))._cache_size()
+    ViterbiDecoder(FlashSpec(parallelism=2), pi, A).decode(em)
+    assert _jit_decode(FlashSpec(parallelism=2))._cache_size() == before

@@ -3,11 +3,10 @@ brute force.  Keep the number of distinct jit shapes small (1 CPU core)."""
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.core import (erdos_renyi_hmm, left_to_right_hmm, random_emissions,
-                        sample_observations, path_score, relative_error,
+                        sample_observations, path_score,
                         viterbi_vanilla, viterbi_checkpoint, flash_viterbi,
                         flash_bs_viterbi, beam_static_viterbi,
                         beam_static_mp_viterbi, viterbi_assoc, viterbi_decode)

@@ -5,7 +5,6 @@ single CPU core, so pools keep the jit cache warm across examples)."""
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 
 pytest.importorskip("hypothesis")
@@ -13,7 +12,6 @@ from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import (erdos_renyi_hmm, random_emissions, flash_viterbi,
                         flash_bs_viterbi, viterbi_vanilla, path_score)
-from repro.core import reference as ref
 
 _SETTINGS = dict(max_examples=12, deadline=None,
                  suppress_health_check=[HealthCheck.too_slow])

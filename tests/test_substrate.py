@@ -1,7 +1,6 @@
 """Substrate tests: optimizer, compression, checkpointing, fault tolerance,
 elastic planning, data pipeline determinism, serving scheduler."""
 
-import os
 
 import numpy as np
 import jax
@@ -10,8 +9,7 @@ import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.optim import (AdamWConfig, init_state, update, schedule,
-                         zero1_specs, quantize, dequantize, ef_accumulate,
-                         init_ef_state)
+                         zero1_specs, dequantize, ef_accumulate)
 from repro.checkpointing.manager import CheckpointManager
 from repro.checkpointing.elastic import plan_rescale, abstract_target_mesh
 from repro.runtime.fault import (HeartbeatMonitor, StragglerDetector,

@@ -4,7 +4,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import (left_to_right_hmm, erdos_renyi_hmm, random_emissions,
+from repro.core import (left_to_right_hmm, erdos_renyi_hmm,
                         viterbi_vanilla, relative_error)
 from repro.serving.alignment import AlignmentConfig, make_alignment_head
 from repro.serving.scheduler import BatchScheduler
