@@ -5,9 +5,9 @@ PY ?= python
 
 .PHONY: test test-fast test-dist test-drills bench bench-smoke \
 	example-quickstart example-streaming example-batch example-adaptive \
-	serve-smoke loadtest-smoke lint lint-fast
+	serve-smoke loadtest-smoke lint lint-fast analysis-deep
 
-lint:  # the full gate: flashlint (AST rules + contracts + retrace), then ruff/mypy if installed
+lint:  # the full gate: flashlint (AST + contracts + retrace) + fast flashprove, then ruff/mypy if installed
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis
 	@if command -v ruff >/dev/null 2>&1; then ruff check .; \
 	else echo "ruff not installed (pip install -e '.[lint]'); skipping"; fi
@@ -16,6 +16,11 @@ lint:  # the full gate: flashlint (AST rules + contracts + retrace), then ruff/m
 
 lint-fast:  # sub-second AST pass only (what pre-commit runs)
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis --lint-only
+
+analysis-deep:  # full flashprove: jaxpr + Pallas VMEM ladder + collective walk, JSON report
+	@mkdir -p benchmarks/out
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis \
+	    --prove-only --deep --report benchmarks/out/flashprove.json
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q

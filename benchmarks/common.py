@@ -47,4 +47,26 @@ def emit(name: str, seconds: float, derived: str = ""):
     print(f"{name},{seconds * 1e6:.1f},{derived}")
 
 
-__all__ = ["timeit", "timeit_np", "decoder_state_bytes", "emit"]
+def flashprove_peak_bytes(method: str, K: int, T: int,
+                          batch: int | None = None, **fields) -> int:
+    """flashprove's IR-derived peak DP-state bytes for `method` at (K, T).
+
+    Traces the same jit body the decoder would run (the `decode_batch` body
+    when `batch` is given) and takes the liveness walk's stateful peak —
+    the *predicted* column the emitted JSON carries next to the planner's
+    modeled `decoder_state_bytes` so the perf trajectory can plot
+    predicted-vs-actual.  The analysis layer is imported lazily so plain
+    timing runs don't pay for a trace.
+    """
+    from repro.analysis.jaxpr_check import (batch_entry_jaxpr,
+                                            dp_state_bytes, entry_jaxpr)
+    from repro.core.spec import SPEC_BY_METHOD
+
+    spec = SPEC_BY_METHOD[method](**fields)
+    closed = (entry_jaxpr(spec, K, T) if batch is None
+              else batch_entry_jaxpr(spec, K, T, batch))
+    return dp_state_bytes(closed)
+
+
+__all__ = ["timeit", "timeit_np", "decoder_state_bytes", "emit",
+           "flashprove_peak_bytes"]

@@ -22,7 +22,7 @@ import jax
 from repro.core import erdos_renyi_hmm, random_emissions
 from repro.core.batch import viterbi_decode_batch
 from repro.kernels.ops import viterbi_decode_fused
-from .common import emit, timeit
+from .common import decoder_state_bytes, emit, flashprove_peak_bytes, timeit
 
 OUT_JSON = os.path.join(os.path.dirname(__file__), "out", "fig12_batch.json")
 
@@ -52,10 +52,16 @@ def run(full: bool = False):
         t_batch = timeit(batched, em, repeats=5)
         t_loop = timeit(loop_fn, em, repeats=5)
         speedup = t_loop / t_batch
+        # memory columns: the planner's modeled per-sequence state bytes
+        # (x B) next to flashprove's IR-derived peak over the actual batch
+        # jaxpr — predicted-vs-modeled for the perf trajectory.
+        model_bytes = decoder_state_bytes("fused", K, T) * B
+        predicted_bytes = flashprove_peak_bytes("fused", K, T, batch=B)
         emit(f"fig12/fused_batch_B{B}", t_batch,
              f"loop_us={t_loop * 1e6:.1f};speedup={speedup:.2f}x")
         rows.append(dict(B=B, T=T, K=K, batch_s=t_batch, loop_s=t_loop,
-                         speedup=speedup))
+                         speedup=speedup, state_bytes_model=model_bytes,
+                         state_bytes_flashprove=predicted_bytes))
 
     os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
     with open(OUT_JSON, "w") as f:

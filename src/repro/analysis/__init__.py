@@ -1,24 +1,46 @@
-"""flashlint — static analysis that gates the decode stack.
+"""Static analysis that gates the decode stack — two tiers, one CLI
+(``python -m repro.analysis``, ``make lint``).
 
-Three layers, one CLI (``python -m repro.analysis``, ``make lint``):
+**Tier 1 — flashlint** (source/trace level, PR 6):
 
   * `analysis.lint` — an AST project linter with repo-specific rules
-    (FL001..FL005): raw jax mesh/shard_map API outside `runtime/jaxcompat`,
+    (FL001..FL006): raw jax mesh/shard_map API outside `runtime/jaxcompat`,
     host-sync primitives in the jit-reachable decode hot paths, `sys.path`
-    manipulation, and legacy string-dispatch `viterbi_decode` outside the
-    pinned shim.  Intentional exceptions are documented in place with
-    ``# flashlint: disable=FL002(reason)`` comments.
+    manipulation, legacy string-dispatch `viterbi_decode` outside the pinned
+    shim, and raw Pallas API outside `kernels/`.  Intentional exceptions are
+    documented in place with ``# flashlint: disable=FL002(reason)`` comments.
 
   * `analysis.contracts` — a trace-time contract checker: every registered
     `DecodeSpec` is run under `jax.eval_shape` over a (K, T, B) grid (no
     execution) asserting output shapes/dtypes/weak-types, and the planner's
     `decoder_state_bytes` cost model is cross-checked against the compiled
-    executables' `memory_analysis()` within pinned per-method tolerances so
-    the budget -> plan ladder can never silently underestimate footprint.
+    executables' `memory_analysis()` within pinned per-method tolerances.
 
   * `analysis.retrace` — a recompilation detector over `ViterbiDecoder`'s
     spec-keyed jit caches: repeated calls with an equal spec, or ragged
     lengths within one shape bucket, must never trigger a retrace.
+
+**Tier 2 — flashprove** (IR level, this PR): semantic passes over *traced
+computations* rather than source text.
+
+  * `analysis.jaxpr_check` — traces every planner-reachable decode entry
+    point and walks the jaxpr: dtype widenings (PV101), host callbacks
+    (PV102), oversized materialized intermediates (PV103), and a liveness
+    walk deriving DP-state/retained bytes + flops, cross-checked against
+    `planner.decoder_state_bytes` formula-vs-IR (PV104).
+
+  * `analysis.pallas_check` — reads every `pl.pallas_call`'s declared
+    BlockSpecs back out of traced kernels and verifies (8, 128) tile
+    alignment (PV201) and per-grid-step VMEM residency against the runtime
+    budget for every reachable tile config (PV202).
+
+  * `analysis.collective_check` — walks the sharded decode jaxpr and fails
+    on any collective primitive (PV301); data-parallel decode must not
+    touch the interconnect.
+
+  Intentional exceptions are declared as module-level `FLASHPROVE_WAIVERS`
+  in the module that owns the computation (`analysis.findings` has the
+  grammar); `analysis.prove.run_prove` orchestrates passes + waivers.
 """
 
 from __future__ import annotations
@@ -30,16 +52,28 @@ __all__ = [
     "ContractError", "ContractReport", "MEMORY_TOLERANCE",
     "check_contracts", "compiled_state_bytes",
     "RetraceError", "RetraceGuard", "check_retrace",
+    "PROVE_RULES", "Finding", "ProveReport", "collect_waivers",
+    "apply_waivers", "run_prove", "check_jaxpr", "check_pallas",
+    "check_collectives", "jaxpr_peak_temp_bytes", "jaxpr_flops",
 ]
 
-# contracts/retrace pull in jax; load them lazily (PEP 562) so the AST-only
-# pre-commit path (`python -m repro.analysis --lint-only`) stays sub-second.
+# Everything beyond the AST linter pulls in jax; load lazily (PEP 562) so
+# the pre-commit path (`python -m repro.analysis --lint-only`) stays
+# sub-second.
 _LAZY = {
     "ContractError": "contracts", "ContractReport": "contracts",
     "MEMORY_TOLERANCE": "contracts", "check_contracts": "contracts",
     "compiled_state_bytes": "contracts",
     "RetraceError": "retrace", "RetraceGuard": "retrace",
     "check_retrace": "retrace",
+    "PROVE_RULES": "findings", "Finding": "findings",
+    "ProveReport": "findings", "collect_waivers": "findings",
+    "apply_waivers": "findings",
+    "run_prove": "prove",
+    "check_jaxpr": "jaxpr_check", "jaxpr_peak_temp_bytes": "jaxpr_check",
+    "jaxpr_flops": "jaxpr_check",
+    "check_pallas": "pallas_check",
+    "check_collectives": "collective_check",
 }
 
 

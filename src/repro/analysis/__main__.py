@@ -1,8 +1,11 @@
-"""CLI for the flashlint gate: ``python -m repro.analysis`` / ``make lint``.
+"""CLI for the analysis gate: ``python -m repro.analysis`` / ``make lint``.
 
-Runs the three layers in order — AST lint, trace-time contracts, retrace
-battery — and exits non-zero if any layer fails.  Layer selection flags exist
-so pre-commit can run the sub-second lint alone while CI runs everything.
+Runs the two tiers in order — tier 1 flashlint (AST lint, trace-time
+contracts, retrace battery) and tier 2 flashprove (jaxpr semantics, Pallas
+VMEM/tiling, collective walk) — and exits non-zero if any layer fails.
+Layer selection flags exist so pre-commit can run the sub-second lint alone
+while CI runs everything; ``--deep`` is what the `analysis-deep` CI job
+runs, with ``--report`` uploading the findings as a JSON artifact.
 """
 
 from __future__ import annotations
@@ -60,11 +63,32 @@ def _run_retrace() -> int:
     return 0
 
 
+def _run_prove(quick: bool, deep: bool,
+               report_path: pathlib.Path | None) -> int:
+    from .prove import run_prove
+    report = run_prove(quick=quick, deep=deep)
+    for finding in report.findings:
+        print(f"PROVE FAIL: {finding}")
+    for finding, reason in report.waived:
+        print(f"prove waived: {finding.code} {finding.subject} ({reason})")
+    for line in report.skipped:
+        print(f"prove skipped: {line}")
+    tier = "deep" if deep else ("quick" if quick else "fast")
+    print(f"flashprove[{tier}]: {len(report.checks)} entry point(s) "
+          f"analyzed, {len(report.findings)} active finding(s), "
+          f"{len(report.waived)} waived")
+    if report_path is not None:
+        report.dump(report_path)
+        print(f"flashprove: findings report written to {report_path}")
+    return 0 if report.ok else 1
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
-        description="flashlint: AST lint + trace-time contracts + retrace "
-                    "guard for the decode stack")
+        description="analysis gate: flashlint (AST lint + contracts + "
+                    "retrace guard) and flashprove (jaxpr semantics + "
+                    "Pallas VMEM/tiling + collective walk)")
     ap.add_argument("paths", nargs="*", type=pathlib.Path,
                     help="files/directories to lint (default: the repro "
                          "package)")
@@ -76,25 +100,39 @@ def main(argv: list[str] | None = None) -> int:
                       help="run just the trace-time contract checker")
     only.add_argument("--retrace-only", action="store_true",
                       help="run just the recompilation battery")
+    only.add_argument("--prove-only", action="store_true",
+                      help="run just the flashprove semantic passes")
     ap.add_argument("--quick", action="store_true",
-                    help="shrink the contract grids to one point each")
+                    help="shrink the contract/prove grids to one point each")
+    ap.add_argument("--deep", action="store_true",
+                    help="full flashprove grids + the Pallas-active K=128 "
+                         "jaxpr points + the VMEM ladder (the analysis-deep "
+                         "CI job)")
+    ap.add_argument("--report", type=pathlib.Path, metavar="PATH",
+                    help="write the flashprove findings report as JSON")
     ap.add_argument("--list-rules", action="store_true",
                     help="print the rule catalogue and exit")
     args = ap.parse_args(argv)
 
     if args.list_rules:
+        from .findings import PROVE_RULES
         from .lint import RULES
-        for code, summary in sorted(RULES.items()):
+        for code, summary in sorted({**RULES, **PROVE_RULES}.items()):
             print(f"{code}  {summary}")
         return 0
 
+    run_all = not (args.lint_only or args.contracts_only
+                   or args.retrace_only or args.prove_only)
     rc = 0
-    if not (args.contracts_only or args.retrace_only):
+    if run_all or args.lint_only:
         rc |= _run_lint([p for p in (args.paths or _default_paths())])
-    if not (args.lint_only or args.retrace_only):
+    if run_all or args.contracts_only:
         rc |= _run_contracts(quick=args.quick)
-    if not (args.lint_only or args.contracts_only):
+    if run_all or args.retrace_only:
         rc |= _run_retrace()
+    if run_all or args.prove_only:
+        rc |= _run_prove(quick=args.quick, deep=args.deep,
+                         report_path=args.report)
     return rc
 
 

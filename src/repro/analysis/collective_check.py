@@ -1,0 +1,92 @@
+"""flashprove pass 3 — no collectives in the data-parallel sharded decode.
+
+`ViterbiDecoder.decode_sharded` shards the request bucket over a mesh axis
+with the HMM tensors replicated; sequences are independent, so the shard
+body must be *embarrassingly* data-parallel — zero cross-device traffic.
+A collective sneaking in (a stray `psum` from a reduction written over the
+batch axis, an `all_gather` from a sharding-rule fallback) would silently
+serialize every decode step on device interconnect.
+
+The check is structural, not behavioral: the sharded entry is traced over a
+single-axis mesh for every batchable method and the jaxpr — including every
+`shard_map` body — is walked for collective primitives (PV301).  Tracing is
+mesh-size-independent (`psum` binds the same equation on a 1-device axis),
+so the pass runs on the CPU lint host with no devices to spare.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .findings import Finding, ProveReport
+from .jaxpr_check import iter_eqns
+
+__all__ = ["COLLECTIVE_PRIMS", "collectives_in", "check_collectives"]
+
+#: Cross-device primitives that must not appear in the shard body.  Matched
+#: by exact name or prefix (``psum`` also catches ``psum2``/``psum_invariant``
+#: across jax versions).
+COLLECTIVE_PRIMS: tuple[str, ...] = (
+    "psum", "pmax", "pmin", "pmean", "all_gather", "all_to_all",
+    "reduce_scatter", "ppermute", "pbroadcast", "pgather", "pshuffle",
+)
+
+
+def _is_collective(prim_name: str) -> bool:
+    return any(prim_name == c or prim_name.startswith(c + "_")
+               or prim_name.startswith(c) and prim_name[len(c):].isdigit()
+               for c in COLLECTIVE_PRIMS)
+
+
+def collectives_in(closed) -> list[str]:
+    """Names of collective primitives anywhere in a traced jaxpr."""
+    return sorted({eqn.primitive.name
+                   for eqn in iter_eqns(getattr(closed, "jaxpr", closed))
+                   if _is_collective(eqn.primitive.name)})
+
+
+def check_collectives(quick: bool = False, deep: bool = False) -> ProveReport:
+    """Trace `decode_sharded` for every batchable spec; PV301 per collective.
+
+    ``quick`` checks one method; ``deep`` currently equals the default run
+    (the walk is already exhaustive over methods — the flag is accepted for
+    CLI symmetry).
+    """
+    del deep
+    from repro.core.decoder import ViterbiDecoder
+    from repro.core.spec import SPEC_BY_METHOD
+    from repro.runtime.jaxcompat import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
+    K, T, B = 8, 16, 4
+    log_pi = jnp.zeros((K,), jnp.float32)
+    log_A = jnp.zeros((K, K), jnp.float32)
+    ems = jnp.zeros((B, T, K), jnp.float32)
+    lengths = jnp.full((B,), T, jnp.int32)
+
+    report = ProveReport()
+    specs = [cls() for cls in SPEC_BY_METHOD.values()
+             if cls().batch_method is not None]
+    if quick:
+        specs = specs[:1]
+    for spec in specs:
+        subject = f"collective:{spec.method}"
+        dec = ViterbiDecoder(spec, log_pi, log_A)
+        try:
+            closed = jax.make_jaxpr(
+                lambda e, ln: dec.decode_sharded(e, ln, mesh=mesh)
+            )(ems, lengths)
+        except Exception as e:
+            report.findings.append(Finding(
+                "PV301", subject, f"trace error {e!r}"))
+            continue
+        found = collectives_in(closed)
+        for name in found:
+            report.findings.append(Finding(
+                "PV301", subject,
+                f"collective {name!r} in the sharded decode body; "
+                f"data-parallel decode must not touch the interconnect"))
+        report.stats[subject] = {"collectives": found}
+        report.checks.append(subject)
+    return report

@@ -20,6 +20,10 @@ Three families of contracts, none of which execute a decode on real data:
     (flash/flash_bs carry the largest pinned ratio for that reason); the
     gate exists to catch *drift* beyond that envelope, and the compiled
     module is also cross-parsed with `launch/hlo_cost.py` as a sanity check.
+    The tier-2 `jaxpr_check` pass tightens this same model from the other
+    side: `planner.crosscheck_state_bytes` bounds the *IR-derived* DP-state
+    bytes (liveness over the traced jaxpr, allocator out of the picture)
+    at ~1x instead of the 8-96x allocator tolerances pinned here.
 
   * **Streaming contracts** — the online decoders are stateful host loops
     (not traceable), so their contract is checked live on a tiny stream:

@@ -1,0 +1,199 @@
+"""flashprove findings: the structured result type + the waiver registry.
+
+The semantic passes (`jaxpr_check`, `pallas_check`, `collective_check`)
+analyze *traced computations* — jaxprs and Pallas kernel signatures — so an
+intentional exception cannot be a source comment the way flashlint's
+``# flashlint: disable=FL002(reason)`` is: the finding has no source line.
+Instead the module that owns the computation declares a module-level
+
+    FLASHPROVE_WAIVERS = {
+        "PV201:beam_step": "beam blocks are (B,) <= 256 ...",
+    }
+
+mapping ``CODE`` or ``CODE:subject-prefix`` to a mandatory human reason.  A
+waiver with an empty reason, an unknown code, or that matches nothing in the
+current run is itself a finding (PV000) — mirroring flashlint's FL005 rule
+that a suppression which does not say *why* (or suppresses nothing)
+suppresses nothing.
+
+Finding code catalogue (`PROVE_RULES`):
+
+  PV000  malformed or unused flashprove waiver
+  PV101  implicit dtype widening (`convert_element_type` to a wider dtype)
+  PV102  host callback primitive in jit-reachable decode code
+  PV103  materialized intermediate above the per-spec bytes threshold
+  PV104  planner cost model below the jaxpr-derived retained-state bytes
+  PV201  Pallas block shape off the (8, 128) tile grid
+  PV202  Pallas per-grid-step VMEM residency over budget
+  PV301  unexpected collective in the data-parallel sharded decode
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import json
+from typing import Iterable, Sequence
+
+__all__ = ["PROVE_RULES", "Finding", "ProveReport", "collect_waivers",
+           "apply_waivers", "WAIVER_MODULES"]
+
+PROVE_RULES: dict[str, str] = {
+    "PV000": "malformed or unused flashprove waiver",
+    "PV101": "implicit dtype widening in a traced decode computation",
+    "PV102": "host callback primitive in jit-reachable decode code",
+    "PV103": "materialized intermediate above the bytes threshold",
+    "PV104": "planner cost model below jaxpr-derived retained-state bytes",
+    "PV201": "Pallas block shape off the (8, 128) tile grid",
+    "PV202": "Pallas per-grid-step VMEM residency over budget",
+    "PV301": "unexpected collective in the data-parallel sharded decode",
+}
+
+#: Modules scanned for `FLASHPROVE_WAIVERS` declarations — the decode stack's
+#: kernel and core layers (the owners of every analyzed computation).
+WAIVER_MODULES: tuple[str, ...] = (
+    "repro.kernels.viterbi_dp",
+    "repro.kernels.ops",
+    "repro.kernels.beam_stream",
+    "repro.kernels.tropical",
+    "repro.core.vanilla",
+    "repro.core.flash",
+    "repro.core.flash_bs",
+    "repro.core.assoc",
+    "repro.core.batch",
+    "repro.core.online",
+    "repro.core.planner",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One flashprove finding: a rule code plus the subject it fired on.
+
+    subject is a stable, hierarchical label ("pass:entry:detail", e.g.
+    ``jaxpr:flash[K=64,T=256]``) so waivers can prefix-match it.
+    """
+    code: str
+    subject: str
+    detail: str
+
+    def __str__(self) -> str:
+        return f"{self.code} {self.subject}: {self.detail}"
+
+    def to_json(self) -> dict:
+        return {"code": self.code, "rule": PROVE_RULES.get(self.code, "?"),
+                "subject": self.subject, "detail": self.detail}
+
+
+@dataclasses.dataclass
+class ProveReport:
+    """Aggregated result of a flashprove run (what `--report` serializes)."""
+    findings: list[Finding] = dataclasses.field(default_factory=list)
+    waived: list[tuple[Finding, str]] = dataclasses.field(default_factory=list)
+    checks: list[str] = dataclasses.field(default_factory=list)
+    skipped: list[str] = dataclasses.field(default_factory=list)
+    #: per-entry stats: subject -> {"retained_bytes": ..., "flops": ...,
+    #: "model_bytes": ...} (jaxpr pass) or {"vmem_bytes": ...} (pallas pass).
+    stats: dict[str, dict] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def extend(self, other: "ProveReport") -> None:
+        self.findings.extend(other.findings)
+        self.waived.extend(other.waived)
+        self.checks.extend(other.checks)
+        self.skipped.extend(other.skipped)
+        self.stats.update(other.stats)
+
+    def to_json(self) -> dict:
+        return {
+            "ok": self.ok,
+            "findings": [f.to_json() for f in self.findings],
+            "waived": [{**f.to_json(), "reason": r} for f, r in self.waived],
+            "checks": len(self.checks),
+            "skipped": self.skipped,
+            "stats": self.stats,
+        }
+
+    def dump(self, path) -> None:
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(self.to_json(), fh, indent=2, sort_keys=True)
+            fh.write("\n")
+
+
+def collect_waivers(modules: Sequence[str] = WAIVER_MODULES
+                    ) -> tuple[dict[str, str], list[Finding]]:
+    """Gather `FLASHPROVE_WAIVERS` declarations from the decode stack.
+
+    Returns (waivers, malformed): waivers maps "CODE[:subject-prefix]" to its
+    reason; malformed holds PV000 findings for empty reasons / unknown codes.
+    """
+    waivers: dict[str, str] = {}
+    malformed: list[Finding] = []
+    for name in modules:
+        try:
+            mod = importlib.import_module(name)
+        except ImportError as e:
+            malformed.append(Finding("PV000", f"waivers:{name}",
+                                     f"module failed to import: {e!r}"))
+            continue
+        declared = getattr(mod, "FLASHPROVE_WAIVERS", None)
+        if declared is None:
+            continue
+        if not isinstance(declared, dict):
+            malformed.append(Finding(
+                "PV000", f"waivers:{name}",
+                "FLASHPROVE_WAIVERS must be a dict of "
+                "'CODE[:subject-prefix]' -> reason"))
+            continue
+        for key, reason in declared.items():
+            code = str(key).split(":", 1)[0]
+            if code not in PROVE_RULES or code == "PV000":
+                malformed.append(Finding(
+                    "PV000", f"waivers:{name}",
+                    f"unknown rule {code!r} in waiver {key!r}"))
+                continue
+            if not str(reason).strip():
+                malformed.append(Finding(
+                    "PV000", f"waivers:{name}",
+                    f"waiver {key!r} has an empty reason; say why"))
+                continue
+            waivers[str(key)] = str(reason)
+    return waivers, malformed
+
+
+def _waiver_matches(waiver_key: str, finding: Finding) -> bool:
+    code, _, prefix = waiver_key.partition(":")
+    if code != finding.code:
+        return False
+    return not prefix or finding.subject.startswith(prefix)
+
+
+def apply_waivers(findings: Iterable[Finding], waivers: dict[str, str],
+                  *, require_used: bool = True
+                  ) -> tuple[list[Finding], list[tuple[Finding, str]]]:
+    """Split findings into (active, waived) per the waiver registry.
+
+    A declared waiver that matched nothing becomes a PV000 active finding
+    when ``require_used`` — stale waivers rot into blanket suppressions
+    otherwise (only meaningful when `findings` came from a full run).
+    """
+    active: list[Finding] = []
+    waived: list[tuple[Finding, str]] = []
+    used: set[str] = set()
+    for f in findings:
+        hit = next((k for k in waivers if _waiver_matches(k, f)), None)
+        if hit is None:
+            active.append(f)
+        else:
+            used.add(hit)
+            waived.append((f, waivers[hit]))
+    if require_used:
+        for key in sorted(set(waivers) - used):
+            active.append(Finding(
+                "PV000", f"waivers:{key}",
+                "waiver matched no finding in this run; remove it or fix "
+                "the subject prefix"))
+    return active, waived

@@ -1,0 +1,462 @@
+"""flashprove pass 1 — semantic analysis of traced decode jaxprs.
+
+Where flashlint (PR 6) reads *source text* and the trace contracts check
+*output avals*, this pass walks the **jaxpr itself** — the computation the
+planner's choices actually compile — for every planner-reachable decode entry
+point: each of the 10 registered `DecodeSpec`s (streaming specs via their
+jitted chunk-advance surrogates), `ViterbiDecoder.decode` / `.decode_batch`
+(the exact module-level jit wrappers `core/decoder.py` caches), over a
+(K, T[, B]) grid.  `decode_sharded` is covered by `collective_check`.
+
+Four things come out of each traced entry:
+
+  * **PV101 — implicit dtype widening.**  Any `convert_element_type` whose
+    target dtype is wider than its operand (same-kind widening, or anything
+    promoting to a 64-bit type).  An accidental f64 upcast doubles every
+    byte count the planner budgets with and silently halves throughput.
+
+  * **PV102 — host callbacks.**  `pure_callback`/`io_callback`/debug
+    callbacks inside jit-reachable decode code force host round-trips per
+    call; the decode hot path must contain none.
+
+  * **PV103 — oversized materialized intermediates.**  Any equation output
+    (at any nesting depth) larger than ``max(PV103_MODEL_FACTOR x model,
+    PV103_FLOOR_BYTES)`` — the signature of an accidental (K, K, T)
+    broadcast that the cost model knows nothing about.
+
+  * **DP-state bytes, retained bytes, flops.**  A liveness walk over the
+    jaxpr derives two byte metrics — `dp_state_bytes` (peak *algorithm
+    state*: loop carries, stacked scan outputs, Pallas output buffers, the
+    paper's "live DP state") and `retained_bytes` (peak of *all* live
+    cross-equation values, plumbing and transients included) — plus an
+    analytic flop count.  `core/planner.py` cross-checks its formulas
+    against the first (PV104 via `planner.crosscheck_state_bytes`):
+    formula-vs-IR, where PR 6's contracts could only do formula-vs-allocator
+    with 8-96x tolerances.
+
+Everything here *traces* (`jax.make_jaxpr`); nothing executes a decode.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Iterator, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.spec import (DecodeSpec, OnlineBeamSpec, OnlineSpec,
+                             SPEC_BY_METHOD)
+from repro.core.planner import spec_state_bytes
+from .findings import Finding, ProveReport
+
+__all__ = [
+    "IRStats", "JAXPR_GRID", "JAXPR_BATCH_GRID", "DEEP_GRID",
+    "DEEP_BATCH_GRID", "PV103_MODEL_FACTOR", "PV103_FLOOR_BYTES",
+    "entry_jaxpr", "batch_entry_jaxpr", "analyze_jaxpr",
+    "retained_bytes", "dp_state_bytes", "flop_count",
+    "jaxpr_peak_temp_bytes", "jaxpr_flops", "check_jaxpr",
+]
+
+#: (K, T) grid every spec's single-sequence entry is traced over.
+JAXPR_GRID: tuple[tuple[int, int], ...] = ((16, 32), (24, 64), (64, 256))
+#: (K, T, B) grid for the batched entry of batchable specs.
+JAXPR_BATCH_GRID: tuple[tuple[int, int, int], ...] = ((16, 32, 3), (24, 48, 4))
+#: --deep adds a Pallas-active point (K % 128 == 0 takes the fused kernel
+#: path instead of the XLA fallback) at serving-realistic sizes.
+DEEP_GRID: tuple[tuple[int, int], ...] = JAXPR_GRID + ((128, 384),)
+DEEP_BATCH_GRID: tuple[tuple[int, int, int], ...] = (
+    JAXPR_BATCH_GRID + ((128, 256, 4),))
+
+#: An intermediate bigger than model x factor (with an absolute floor so tiny
+#: grids don't false-positive on padding) is PV103.
+PV103_MODEL_FACTOR = 4.0
+PV103_FLOOR_BYTES = 1 << 20
+
+_CALLBACK_PRIMS = ("callback", "debug_print", "outside_call")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr plumbing
+# ---------------------------------------------------------------------------
+
+def _inner_jaxprs(eqn) -> list:
+    """Inner (Closed)Jaxprs of a higher-order equation, flattened."""
+    inner = []
+    for val in eqn.params.values():
+        for x in (val if isinstance(val, (tuple, list)) else (val,)):
+            if hasattr(x, "eqns"):                       # open Jaxpr
+                inner.append(x)
+            elif hasattr(x, "jaxpr") and hasattr(getattr(x, "jaxpr"), "eqns"):
+                inner.append(x.jaxpr)                    # ClosedJaxpr
+    return inner
+
+
+def iter_eqns(jaxpr, *, into_pallas: bool = True) -> Iterator:
+    """Yield every equation at every nesting depth (depth-first)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if eqn.primitive.name == "pallas_call" and not into_pallas:
+            continue
+        for inner in _inner_jaxprs(eqn):
+            yield from iter_eqns(inner, into_pallas=into_pallas)
+
+
+def _aval_bytes(aval) -> int:
+    shape = getattr(aval, "shape", None)
+    dtype = getattr(aval, "dtype", None)
+    if shape is None or dtype is None:
+        return 0
+    return math.prod(shape) * np.dtype(dtype).itemsize
+
+
+def _is_var(v) -> bool:
+    return hasattr(v, "aval") and not hasattr(v, "val")   # Var, not Literal
+
+
+# ---------------------------------------------------------------------------
+# Retained-state liveness
+# ---------------------------------------------------------------------------
+
+#: Loop/kernel primitives whose outputs are *algorithm state*: carries that
+#: thread a DP recurrence, tables a scan stacks, buffers a kernel writes.
+_STATEFUL_PRIMS = frozenset({"scan", "while", "pallas_call"})
+
+
+def _liveness_peak(jaxpr, *, stateful_only: bool) -> int:
+    """Shared liveness walk behind `retained_bytes` / `dp_state_bytes`.
+
+    Peak over equation positions of live value bytes.  Excludes the jaxpr's
+    own inputs and outputs (caller-owned — the same carve-out
+    `memory_analysis().temp_size_in_bytes` makes).  Higher-order equations
+    contribute one iteration's working set of their body (`scan`/`while`
+    bodies never materialize across iterations; `pjit` inlines; `cond`
+    takes the max branch); Pallas kernel bodies contribute nothing
+    (VMEM-resident — `pallas_check` budgets those).
+
+    With ``stateful_only`` the walk counts only values produced by
+    `_STATEFUL_PRIMS` — loop carries, stacked scan outputs, kernel output
+    buffers — i.e. the IR counterpart of the planner's "live DP state".
+    Plumbing copies (reshapes, reversals, pads) and per-step compute
+    transients are excluded; those belong to the allocator, which
+    `contracts.py` bounds separately.
+    """
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)                # accept ClosedJaxpr
+    boundary = {id(v) for v in jaxpr.invars}
+    boundary |= {id(v) for v in jaxpr.constvars}
+    boundary |= {id(v) for v in jaxpr.outvars if _is_var(v)}
+
+    last_use: dict[int, int] = {}
+    for i, eqn in enumerate(jaxpr.eqns):
+        for v in eqn.invars:
+            if _is_var(v):
+                last_use[id(v)] = i
+
+    live = 0
+    sizes: dict[int, int] = {}
+    peak = 0
+    for i, eqn in enumerate(jaxpr.eqns):
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            inner = 0
+        else:
+            bodies = _inner_jaxprs(eqn)
+            inner_vals = [_liveness_peak(b, stateful_only=stateful_only)
+                          for b in bodies]
+            inner = (max(inner_vals) if name == "cond"
+                     else sum(inner_vals)) if inner_vals else 0
+        counted = not stateful_only or name in _STATEFUL_PRIMS
+        out_bytes = sum(_aval_bytes(v.aval) for v in eqn.outvars
+                        if id(v) not in boundary) if counted else 0
+        peak = max(peak, live + inner + out_bytes)
+        if counted:
+            for v in eqn.outvars:
+                vid = id(v)
+                if vid in boundary or vid not in last_use:
+                    continue                              # output or dead
+                sizes[vid] = _aval_bytes(v.aval)
+                live += sizes[vid]
+        for v in eqn.invars:
+            vid = id(v) if _is_var(v) else None
+            if vid in sizes and last_use.get(vid) == i:
+                live -= sizes.pop(vid)
+    return peak
+
+
+def retained_bytes(jaxpr) -> int:
+    """Peak bytes of *all* retained cross-equation values — temporaries,
+    plumbing copies, DP state alike.  The honest "how much does this trace
+    hold at once" number (reported in stats and benchmark JSON)."""
+    return _liveness_peak(jaxpr, stateful_only=False)
+
+
+def dp_state_bytes(jaxpr) -> int:
+    """Peak bytes of *algorithm state*: loop carries, stacked scan outputs,
+    Pallas output buffers, over their live ranges.  This is the quantity
+    `planner.decoder_state_bytes` claims to model, so it is what PV104
+    cross-checks the formulas against."""
+    return _liveness_peak(jaxpr, stateful_only=True)
+
+
+# ---------------------------------------------------------------------------
+# Flop counting
+# ---------------------------------------------------------------------------
+
+_EW_PRIMS = frozenset({
+    "add", "sub", "mul", "div", "max", "min", "pow", "rem", "neg", "abs",
+    "exp", "log", "log1p", "expm1", "tanh", "logistic", "sqrt", "rsqrt",
+    "floor", "ceil", "round", "sign", "select_n", "clamp", "and", "or",
+    "xor", "not", "eq", "ne", "lt", "le", "gt", "ge", "nextafter",
+    "integer_pow", "square",
+})
+_REDUCE_PRIMS = frozenset({
+    "reduce_max", "reduce_min", "reduce_sum", "reduce_prod", "argmax",
+    "argmin", "reduce_and", "reduce_or", "cumsum", "cummax", "cummin",
+})
+
+
+def flop_count(jaxpr) -> int:
+    """Analytic flop estimate for one execution of `jaxpr`.
+
+    `scan` multiplies its body by the trip count; `while` counts one
+    iteration (a documented lower bound — trip counts are data-dependent);
+    `pallas_call` multiplies its kernel body by the grid size.
+    """
+    jaxpr = getattr(jaxpr, "jaxpr", jaxpr)
+    total = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "scan":
+            total += flop_count(eqn.params["jaxpr"]) * int(eqn.params["length"])
+        elif name == "while":
+            total += (flop_count(eqn.params["body_jaxpr"])
+                      + flop_count(eqn.params["cond_jaxpr"]))
+        elif name == "cond":
+            total += max((flop_count(b) for b in eqn.params["branches"]),
+                         default=0)
+        elif name == "pallas_call":
+            grid = getattr(eqn.params.get("grid_mapping"), "grid", ()) or ()
+            steps = math.prod(int(g) for g in grid) if grid else 1
+            total += flop_count(eqn.params["jaxpr"]) * steps
+        elif name == "dot_general":
+            (contract, _), _ = (eqn.params["dimension_numbers"][0],
+                                eqn.params["dimension_numbers"][1])
+            lhs = eqn.invars[0].aval
+            cdim = math.prod(lhs.shape[d] for d in contract) or 1
+            out = math.prod(getattr(eqn.outvars[0].aval, "shape", ())) or 1
+            total += 2 * out * cdim
+        elif name in _EW_PRIMS:
+            total += math.prod(getattr(eqn.outvars[0].aval, "shape", ())) or 1
+        elif name in _REDUCE_PRIMS:
+            total += math.prod(getattr(eqn.invars[0].aval, "shape", ())) or 1
+        else:
+            for inner in _inner_jaxprs(eqn):
+                total += flop_count(inner)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Per-equation findings
+# ---------------------------------------------------------------------------
+
+def _kind(d: np.dtype) -> str:
+    # the ml_dtypes floats (bfloat16, float8_*) register as numpy kind 'V';
+    # treat them as floats or bf16 -> f32 never reads as a widening.
+    return "f" if d.kind == "V" and "float" in d.name else d.kind
+
+
+def _is_widening(old, new) -> bool:
+    o, n = np.dtype(old), np.dtype(new)
+    if o == n:
+        return False
+    if _kind(o) == _kind(n) and n.itemsize > o.itemsize:
+        return True        # f32 -> f64, i32 -> i64, bf16/f16 -> f32 ...
+    return n.itemsize >= 8 and n.kind in "fiuc" and n.itemsize > o.itemsize
+
+
+def _eqn_findings(closed, subject: str, threshold: int) -> list[Finding]:
+    found: list[Finding] = []
+    for eqn in iter_eqns(getattr(closed, "jaxpr", closed)):
+        name = eqn.primitive.name
+        if name == "convert_element_type":
+            old = eqn.invars[0].aval.dtype
+            new = eqn.params["new_dtype"]
+            if _is_widening(old, new):
+                found.append(Finding(
+                    "PV101", subject,
+                    f"convert_element_type {np.dtype(old).name} -> "
+                    f"{np.dtype(new).name} widens the traced computation"))
+        elif any(tag in name for tag in _CALLBACK_PRIMS):
+            found.append(Finding(
+                "PV102", subject,
+                f"host callback primitive {name!r} in jit-reachable decode "
+                f"code"))
+        for v in eqn.outvars:
+            b = _aval_bytes(getattr(v, "aval", None))
+            if b > threshold:
+                shape = tuple(v.aval.shape)
+                found.append(Finding(
+                    "PV103", subject,
+                    f"{name} materializes {shape} "
+                    f"{np.dtype(v.aval.dtype).name} = {b:,}B "
+                    f"(> threshold {threshold:,}B) — the cost model knows "
+                    f"nothing this large"))
+    return found
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def _abstract_hmm(K: int, T: int):
+    return (jax.ShapeDtypeStruct((K,), jnp.float32),
+            jax.ShapeDtypeStruct((K, K), jnp.float32),
+            jax.ShapeDtypeStruct((T, K), jnp.float32))
+
+
+def entry_jaxpr(spec: DecodeSpec, K: int, T: int):
+    """Closed jaxpr of the spec's single-sequence decode at (K, T).
+
+    Jittable specs trace `ViterbiDecoder.decode`'s exact jit body
+    (`core.decoder._run_spec`).  The streaming specs are stateful host
+    loops, so their traced surrogate is the jitted chunk advance the loop
+    drives — the only jit-reachable computation they own.
+    """
+    from repro.core.decoder import _run_spec
+    pi, A, em = _abstract_hmm(K, T)
+    if isinstance(spec, OnlineSpec):
+        from repro.kernels.ops import viterbi_chunk_step
+        C = min(spec.stream_chunk, T)
+        chunk = jax.ShapeDtypeStruct((C, K), jnp.float32)
+        delta = jax.ShapeDtypeStruct((K,), jnp.float32)
+        return jax.make_jaxpr(
+            lambda a, e, d: viterbi_chunk_step(a, e, d))(A, chunk, delta)
+    if isinstance(spec, OnlineBeamSpec):
+        from repro.core.online import _beam_chunk_scan
+        B = min(spec.beam_width, K)
+        kchunk = min(spec.kchunk, K)
+        Kp = -(-K // kchunk) * kchunk
+        C = min(spec.stream_chunk, T)
+        Ap = jax.ShapeDtypeStruct((Kp, Kp), jnp.float32)
+        chunk = jax.ShapeDtypeStruct((C, Kp), jnp.float32)
+        sc = jax.ShapeDtypeStruct((B,), jnp.float32)
+        st = jax.ShapeDtypeStruct((B,), jnp.int32)
+        return jax.make_jaxpr(
+            lambda a, e, s, q: _beam_chunk_scan(a, e, s, q, B, kchunk)
+        )(Ap, chunk, sc, st)
+    return jax.make_jaxpr(
+        lambda p, a, e: _run_spec(spec, p, a, e))(pi, A, em)
+
+
+def batch_entry_jaxpr(spec: DecodeSpec, K: int, T: int, B: int):
+    """Closed jaxpr of `ViterbiDecoder.decode_batch`'s jit body at (K, T, B)."""
+    from repro.core.decoder import _run_spec_batch
+    pi, A, _ = _abstract_hmm(K, T)
+    em = jax.ShapeDtypeStruct((B, T, K), jnp.float32)
+    lengths = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return jax.make_jaxpr(
+        lambda e, p, a, ln: _run_spec_batch(spec, e, p, a, ln)
+    )(em, pi, A, lengths)
+
+
+@dataclasses.dataclass(frozen=True)
+class IRStats:
+    """What one traced entry point derives from its jaxpr."""
+    retained_bytes: int     # all live cross-equation values (honest peak)
+    dp_state_bytes: int     # loop-carried / stacked / kernel-output state
+    flops: int
+    model_bytes: int        # planner.spec_state_bytes at the same (K, T)
+
+
+def analyze_jaxpr(closed, subject: str, model_bytes: int
+                  ) -> tuple[IRStats, list[Finding]]:
+    """Stats + per-equation findings for one traced entry point."""
+    threshold = int(max(PV103_MODEL_FACTOR * model_bytes, PV103_FLOOR_BYTES))
+    findings = _eqn_findings(closed, subject, threshold)
+    stats = IRStats(retained_bytes=retained_bytes(closed),
+                    dp_state_bytes=dp_state_bytes(closed),
+                    flops=flop_count(closed), model_bytes=model_bytes)
+    return stats, findings
+
+
+def jaxpr_peak_temp_bytes(spec: DecodeSpec, K: int, T: int) -> int:
+    """IR-derived peak DP-state bytes for `spec` at (K, T) — the quantity
+    `planner.decoder_state_bytes` must upper-bound (PV104)."""
+    return dp_state_bytes(entry_jaxpr(spec, K, T))
+
+
+def jaxpr_flops(spec: DecodeSpec, K: int, T: int) -> int:
+    """IR-derived flop count for `spec` at (K, T)."""
+    return flop_count(entry_jaxpr(spec, K, T))
+
+
+# ---------------------------------------------------------------------------
+# The pass
+# ---------------------------------------------------------------------------
+
+def check_jaxpr(quick: bool = False, deep: bool = False,
+                specs: Sequence[DecodeSpec] | None = None,
+                crosscheck: Callable | None = None) -> ProveReport:
+    """Trace every planner-reachable decode entry point and analyze its IR.
+
+    ``quick`` shrinks the grids to one point each; ``deep`` extends them
+    with the Pallas-active (K = 128) points.  ``crosscheck`` defaults to
+    `planner.crosscheck_state_bytes` (PV104 formula-vs-IR).
+    """
+    if crosscheck is None:
+        from repro.core.planner import crosscheck_state_bytes
+        crosscheck = crosscheck_state_bytes
+    if specs is None:
+        specs = tuple(cls() for cls in SPEC_BY_METHOD.values())
+    grid = DEEP_GRID if deep else (JAXPR_GRID[:1] if quick else JAXPR_GRID)
+    bgrid = (DEEP_BATCH_GRID if deep
+             else (JAXPR_BATCH_GRID[:1] if quick else JAXPR_BATCH_GRID))
+    report = ProveReport()
+    for spec in specs:
+        for K, T in grid:
+            subject = f"jaxpr:{spec.method}[K={K},T={T}]"
+            model = spec_state_bytes(spec, K, T)
+            try:
+                closed = entry_jaxpr(spec, K, T)
+            except Exception as e:       # tracing itself must not fail
+                report.findings.append(Finding(
+                    "PV103", subject, f"trace error {e!r}"))
+                continue
+            stats, found = analyze_jaxpr(closed, subject, model)
+            report.findings.extend(found)
+            err = crosscheck(spec, K, T, stats.dp_state_bytes)
+            if err:
+                report.findings.append(Finding("PV104", subject, err))
+            report.stats[subject] = {
+                "retained_bytes": stats.retained_bytes,
+                "dp_state_bytes": stats.dp_state_bytes,
+                "flops": stats.flops,
+                "model_bytes": stats.model_bytes,
+            }
+            report.checks.append(subject)
+        if spec.batch_method is None:
+            continue
+        for K, T, B in bgrid:
+            subject = f"jaxpr:{spec.method}:batch[K={K},T={T},B={B}]"
+            model = spec_state_bytes(spec, K, T) * B
+            try:
+                closed = batch_entry_jaxpr(spec, K, T, B)
+            except Exception as e:
+                report.findings.append(Finding(
+                    "PV103", subject, f"trace error {e!r}"))
+                continue
+            stats, found = analyze_jaxpr(closed, subject, model)
+            report.findings.extend(found)
+            err = crosscheck(spec, K, T, stats.dp_state_bytes, batch=B)
+            if err:
+                report.findings.append(Finding("PV104", subject, err))
+            report.stats[subject] = {
+                "retained_bytes": stats.retained_bytes,
+                "dp_state_bytes": stats.dp_state_bytes,
+                "flops": stats.flops,
+                "model_bytes": stats.model_bytes,
+            }
+            report.checks.append(subject)
+    return report

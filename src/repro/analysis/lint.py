@@ -30,6 +30,13 @@ Rule catalogue (see `RULES`):
          missing reason) — a disable that does not say *why* suppresses
          nothing.
 
+  FL006  raw Pallas API (``pl.pallas_call`` / ``pl.BlockSpec`` or any
+         ``jax.experimental.pallas`` import) outside ``kernels/``.  The
+         flashprove Pallas verifier (`analysis.pallas_check`) statically
+         budgets VMEM for every kernel by enumerating the entry points in
+         ``kernels/``; a pallas_call living anywhere else would silently
+         escape that audit, so the kernel-layer boundary is enforced here.
+
 Suppression grammar, one or more comma-separated entries::
 
     x = float(delta[q])  # flashlint: disable=FL002(commit-point transfer)
@@ -59,6 +66,7 @@ RULES: dict[str, str] = {
     "FL003": "sys.path manipulation",
     "FL004": "string-dispatch viterbi_decode outside the shim and tests",
     "FL005": "malformed flashlint disable comment",
+    "FL006": "raw Pallas API outside kernels/",
 }
 
 # FL001 — exact dotted names that must stay inside the compat shim.
@@ -75,6 +83,12 @@ _FL001_FROM = {
     ("jax.sharding", "AbstractMesh"),
     ("jax.experimental.shard_map", "shard_map"),
 }
+
+# FL006 — the Pallas namespace and the two construction surfaces that define
+# a kernel; any of these outside kernels/ bypasses the static VMEM audit.
+_FL006_MODULE = "jax.experimental.pallas"
+_FL006_ATTRS = {"pallas_call", "BlockSpec"}
+_FL006_ROOTS = {"pl", "pallas", "pltpu"}
 
 # FL002 — dotted call targets that always force a device->host sync, and
 # attribute chains through these never refer to device data (static metadata).
@@ -122,6 +136,11 @@ def _is_hot_path(path: str) -> bool:
 
 def _is_dispatch_shim(path: str) -> bool:
     return _parts(path)[-2:] == ("core", "api.py")
+
+
+def _is_kernel_layer(path: str) -> bool:
+    """kernels/ — the only home for raw Pallas API (FL006 scope)."""
+    return "kernels" in _parts(path)[:-1]
 
 
 def _is_test_file(path: str) -> bool:
@@ -263,6 +282,7 @@ class _Visitor(ast.NodeVisitor):
         self.check_fl002 = _is_hot_path(path)
         self.check_fl004 = not (_is_dispatch_shim(path)
                                 or _is_test_file(path))
+        self.check_fl006 = not (_is_kernel_layer(path) or _is_test_file(path))
         self.found: list[Violation] = []
 
     def _flag(self, node: ast.AST, code: str, message: str) -> None:
@@ -278,6 +298,14 @@ class _Visitor(ast.NodeVisitor):
                     self._flag(node, "FL001",
                                f"import of {alias.name}; use "
                                f"repro.runtime.jaxcompat instead")
+        if self.check_fl006:
+            for alias in node.names:
+                if (alias.name == _FL006_MODULE
+                        or alias.name.startswith(_FL006_MODULE + ".")):
+                    self._flag(node, "FL006",
+                               f"import of {alias.name} outside kernels/; "
+                               f"Pallas kernels live in repro.kernels where "
+                               f"the VMEM audit can see them")
         self.generic_visit(node)
 
     def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
@@ -287,6 +315,15 @@ class _Visitor(ast.NodeVisitor):
                     self._flag(node, "FL001",
                                f"'from {node.module} import {alias.name}'; "
                                f"use repro.runtime.jaxcompat instead")
+        if self.check_fl006 and node.module:
+            pallas_from = (node.module == "jax.experimental"
+                           and any(a.name == "pallas" for a in node.names))
+            if (pallas_from or node.module == _FL006_MODULE
+                    or node.module.startswith(_FL006_MODULE + ".")):
+                self._flag(node, "FL006",
+                           f"'from {node.module} import ...' pulls Pallas "
+                           f"API outside kernels/; move the kernel into "
+                           f"repro.kernels")
         self.generic_visit(node)
 
     # -- attribute references (FL001, FL003) --------------------------------
@@ -303,6 +340,13 @@ class _Visitor(ast.NodeVisitor):
                 self._flag(node, "FL003",
                            "sys.path manipulation; use PYTHONPATH=src or an "
                            "editable install")
+            if self.check_fl006 and node.attr in _FL006_ATTRS:
+                root = dotted.split(".", 1)[0]
+                if root in _FL006_ROOTS or dotted.startswith(_FL006_MODULE):
+                    self._flag(node, "FL006",
+                               f"raw {dotted} outside kernels/; Pallas "
+                               f"kernels live in repro.kernels where the "
+                               f"VMEM audit can see them")
         self.generic_visit(node)
 
     # -- calls (FL002, FL004) -----------------------------------------------

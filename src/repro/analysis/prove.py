@@ -1,0 +1,46 @@
+"""flashprove — orchestration of the three semantic passes + waivers.
+
+`run_prove` is the library entry the CLI, CI, and tests share: run the
+jaxpr, Pallas, and collective passes, gather `FLASHPROVE_WAIVERS`
+declarations from the decode stack, and split findings into active vs
+waived.  Zero active findings is the merge bar (`report.ok`).
+
+Tiers (mirrors the flashlint/contracts split):
+
+  * default — jaxpr pass over the standard grid, one Pallas config per
+    kernel, collective walk of one method.  Fast enough for `make lint`.
+  * ``--quick`` — single grid point everywhere (pre-commit smoke).
+  * ``--deep`` — full grids plus the Pallas-active K=128 jaxpr points and
+    the VMEM ladder up to the runtime guard's edge; what CI's
+    `analysis-deep` job runs and uploads as a JSON artifact.
+"""
+
+from __future__ import annotations
+
+from .findings import ProveReport, apply_waivers, collect_waivers
+
+__all__ = ["run_prove"]
+
+
+def run_prove(quick: bool = False, deep: bool = False,
+              vmem_budget: int | None = None) -> ProveReport:
+    """Run all flashprove passes; returns a report with waivers applied."""
+    from .collective_check import check_collectives
+    from .jaxpr_check import check_jaxpr
+    from .pallas_check import DEFAULT_VMEM_BUDGET, check_pallas
+
+    report = ProveReport()
+    report.extend(check_jaxpr(quick=quick, deep=deep))
+    report.extend(check_pallas(quick=quick or not deep, deep=deep,
+                               budget=vmem_budget or DEFAULT_VMEM_BUDGET))
+    report.extend(check_collectives(quick=quick, deep=deep))
+
+    waivers, malformed = collect_waivers()
+    # Unused-waiver policy needs the full finding surface; partial runs
+    # (quick / default) skip it so a narrowed grid can't flag a waiver
+    # that only matches deep-tier subjects.
+    active, waived = apply_waivers(report.findings, waivers,
+                                   require_used=deep and not quick)
+    report.findings = malformed + active
+    report.waived.extend(waived)
+    return report

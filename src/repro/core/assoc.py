@@ -43,4 +43,14 @@ def viterbi_assoc(log_pi, log_A, em):
     return path, score
 
 
+#: flashprove waivers (see analysis/findings.py for the grammar).
+FLASHPROVE_WAIVERS = {
+    "PV103:jaxpr:assoc": (
+        "associative_scan combines ~T/2 tropical matmul pairs per level, "
+        "each materializing a (pairs, K, K, K) broadcast that XLA fuses "
+        "into the max-reduction; O(T K^2) products are the documented, "
+        "modeled cost of the assoc method (decoder_state_bytes = T K^2 4) "
+        "and the K^3 broadcast is its transient working set"),
+}
+
 __all__ = ["viterbi_assoc"]

@@ -220,6 +220,15 @@ def flash_viterbi(log_pi, log_A, em, parallelism: int = 8,
     return q_star[:T], score
 
 
+#: flashprove waivers (see analysis/findings.py for the grammar).
+FLASHPROVE_WAIVERS = {
+    "PV103:jaxpr:flash:batch": (
+        "the vmapped DP step broadcasts (batch, lanes, K, K) scores for one "
+        "time step; it is per-step compute working set XLA fuses into the "
+        "argmax/max reduction, never a retained table, and it scales with "
+        "the lane count the planner already bounds"),
+}
+
 __all__ = [
     "flash_viterbi",
     "plan_padding",

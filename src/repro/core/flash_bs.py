@@ -259,4 +259,13 @@ def flash_bs_viterbi(log_pi, log_A, em, beam_width: int = 128,
     return q_star[:T], score
 
 
+#: flashprove waivers (see analysis/findings.py for the grammar).
+FLASHPROVE_WAIVERS = {
+    "PV103:jaxpr:flash_bs:batch": (
+        "the vmapped beam transition gathers/broadcasts a (batch, lanes, "
+        "K, K) score block for one time step; per-step compute working set "
+        "fused by XLA into the streaming top-B reduction, not retained "
+        "state — the beam carry the planner models stays O(lanes x B)"),
+}
+
 __all__ = ["flash_bs_viterbi", "pad_state_space"]

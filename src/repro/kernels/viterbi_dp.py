@@ -138,4 +138,13 @@ def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array,
     return psi[0], delta_T[0]
 
 
+#: flashprove waivers (see analysis/findings.py for the grammar).
+FLASHPROVE_WAIVERS = {
+    "PV201:pallas:viterbi_dp.viterbi_forward_batch": (
+        "the (1, bt) pad-mask block streams bt per-step flags (32 B at the "
+        "default bt=8) next to the (bt, K) emission block; its lane padding "
+        "costs one tile of bandwidth per grid step, immaterial against the "
+        "bt x K emission stream it rides with"),
+}
+
 __all__ = ["viterbi_forward", "viterbi_forward_batch"]

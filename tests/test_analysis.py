@@ -91,6 +91,29 @@ def test_fl005_malformed_disables():
     assert sorted(got) == ["FL002", "FL005"]
 
 
+def test_fl006_raw_pallas_flagged_outside_kernels():
+    assert codes("import jax.experimental.pallas as pl\n", COLD) == ["FL006"]
+    assert codes("from jax.experimental import pallas as pl\n",
+                 COLD) == ["FL006"]
+    assert codes("from jax.experimental.pallas import pallas_call\n",
+                 COLD) == ["FL006"]
+    assert codes("out = pl.pallas_call(body, grid=(4,))(x)\n",
+                 COLD) == ["FL006"]
+    assert codes("spec = pltpu.BlockSpec((8, 128), lambda i: (i, 0))\n",
+                 COLD) == ["FL006"]
+
+
+def test_fl006_allowed_in_kernels_tests_and_with_reason():
+    src = "import jax.experimental.pallas as pl\n"
+    assert codes(src, "src/repro/kernels/viterbi_dp.py") == []
+    assert codes(src, "tests/test_kernels.py") == []
+    assert codes("import jax.experimental.pallas as pl"
+                 "  # flashlint: disable=FL006(prototype bench)\n",
+                 COLD) == []
+    # a non-pallas root spelling the same attribute is not a violation
+    assert codes("spec = mylib.BlockSpec((8, 128))\n", COLD) == []
+
+
 # ---------------------------------------------------------------------------
 # Disable grammar
 # ---------------------------------------------------------------------------
