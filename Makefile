@@ -5,7 +5,7 @@ PY ?= python
 
 .PHONY: test test-fast test-dist test-drills bench bench-smoke \
 	example-quickstart example-streaming example-batch example-adaptive \
-	serve-smoke loadtest-smoke lint lint-fast analysis-deep
+	serve-smoke loadtest-smoke inflight-smoke lint lint-fast analysis-deep
 
 lint:  # the full gate: flashlint (AST + contracts + retrace) + fast flashprove, then ruff/mypy if installed
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis
@@ -59,6 +59,11 @@ serve-smoke:  # budget-driven serving path end-to-end (CI runs this)
 loadtest-smoke:  # seeded load + differential oracle -> benchmarks/out/loadtest.json (CI runs this)
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.loadtest \
 	    --seed 0 --requests 16 --states 24 --stream-frac 0.25
+
+inflight-smoke:  # inflight vs bucketed A/B at high concurrency -> benchmarks/out/inflight.json (CI runs this)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.loadtest \
+	    --inflight --seed 0 --requests 80 --states 32 --interarrival-us 400 \
+	    --inflight-slots 80
 
 test-drills:  # fault drills (worker death / mesh rescale / budget shrink) on 8 virtual devices
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \

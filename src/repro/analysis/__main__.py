@@ -52,9 +52,10 @@ def _run_contracts(quick: bool) -> int:
 
 
 def _run_retrace() -> int:
-    from .retrace import RetraceError, check_retrace
+    from .retrace import RetraceError, check_inflight_retrace, check_retrace
     try:
         passed = check_retrace()
+        passed += check_inflight_retrace()
     except RetraceError as e:
         print(f"RETRACE FAIL: {e}")
         return 1

@@ -49,14 +49,15 @@ import numpy as np
 
 from repro.core.spec import (DecodeSpec, OnlineBeamSpec, OnlineSpec,
                              SPEC_BY_METHOD)
-from repro.core.planner import spec_state_bytes
+from repro.core.planner import inflight_state_bytes, spec_state_bytes
 from .findings import Finding, ProveReport
 
 __all__ = [
     "IRStats", "JAXPR_GRID", "JAXPR_BATCH_GRID", "DEEP_GRID",
-    "DEEP_BATCH_GRID", "PV103_MODEL_FACTOR", "PV103_FLOOR_BYTES",
-    "entry_jaxpr", "batch_entry_jaxpr", "analyze_jaxpr",
-    "retained_bytes", "dp_state_bytes", "flop_count",
+    "DEEP_BATCH_GRID", "INFLIGHT_GRID", "DEEP_INFLIGHT_GRID",
+    "PV103_MODEL_FACTOR", "PV103_FLOOR_BYTES",
+    "entry_jaxpr", "batch_entry_jaxpr", "inflight_entry_jaxpr",
+    "analyze_jaxpr", "retained_bytes", "dp_state_bytes", "flop_count",
     "jaxpr_peak_temp_bytes", "jaxpr_flops", "check_jaxpr",
 ]
 
@@ -69,6 +70,11 @@ JAXPR_BATCH_GRID: tuple[tuple[int, int, int], ...] = ((16, 32, 3), (24, 48, 4))
 DEEP_GRID: tuple[tuple[int, int], ...] = JAXPR_GRID + ((128, 384),)
 DEEP_BATCH_GRID: tuple[tuple[int, int, int], ...] = (
     JAXPR_BATCH_GRID + ((128, 256, 4),))
+#: (S, block, K) grid for the inflight slot-pool step (`serving.inflight`);
+#: --deep adds a Pallas-active point.
+INFLIGHT_GRID: tuple[tuple[int, int, int], ...] = ((4, 8, 16), (8, 16, 24))
+DEEP_INFLIGHT_GRID: tuple[tuple[int, int, int], ...] = (
+    INFLIGHT_GRID + ((8, 16, 128),))
 
 #: An intermediate bigger than model x factor (with an absolute floor so tiny
 #: grids don't false-positive on padding) is PV103.
@@ -361,6 +367,26 @@ def batch_entry_jaxpr(spec: DecodeSpec, K: int, T: int, B: int):
     )(em, pi, A, lengths)
 
 
+def inflight_entry_jaxpr(S: int, block: int, K: int):
+    """Closed jaxpr of the inflight scheduler's batched slot step.
+
+    This is the one computation `serving.inflight.InflightScheduler` runs
+    per `step()` — fixed shapes (S, block, K) for the pool's lifetime, seed
+    masking and the slot-masked block advance fused into a single trace.
+    """
+    from repro.serving.inflight import _inflight_step
+    pi = jax.ShapeDtypeStruct((K,), jnp.float32)
+    A = jax.ShapeDtypeStruct((K, K), jnp.float32)
+    em0 = jax.ShapeDtypeStruct((S, K), jnp.float32)
+    fresh = jax.ShapeDtypeStruct((S,), jnp.bool_)
+    em = jax.ShapeDtypeStruct((S, block, K), jnp.float32)
+    delta = jax.ShapeDtypeStruct((S, K), jnp.float32)
+    nfeed = jax.ShapeDtypeStruct((S,), jnp.int32)
+    return jax.make_jaxpr(
+        lambda p, a, e0, f, e, d, n: _inflight_step(p, a, e0, f, e, d, n)
+    )(pi, A, em0, fresh, em, delta, nfeed)
+
+
 @dataclasses.dataclass(frozen=True)
 class IRStats:
     """What one traced entry point derives from its jaxpr."""
@@ -459,4 +485,38 @@ def check_jaxpr(quick: bool = False, deep: bool = False,
                 "model_bytes": stats.model_bytes,
             }
             report.checks.append(subject)
+
+    # the inflight serving tier's slot-pool step — not a DecodeSpec, but it
+    # is planner-reachable (admission budgets against
+    # `planner.inflight_state_bytes`) and jit-resident for the scheduler's
+    # whole lifetime, so it gets the same PV101/102/103 walk plus an inline
+    # PV104: the pool formula must upper-bound the IR's DP state.
+    igrid = (DEEP_INFLIGHT_GRID if deep
+             else (INFLIGHT_GRID[:1] if quick else INFLIGHT_GRID))
+    for S, block, K in igrid:
+        subject = f"jaxpr:inflight[S={S},block={block},K={K}]"
+        model = inflight_state_bytes(K, block, S)
+        try:
+            closed = inflight_entry_jaxpr(S, block, K)
+        except Exception as e:
+            report.findings.append(Finding(
+                "PV103", subject, f"trace error {e!r}"))
+            continue
+        stats, found = analyze_jaxpr(closed, subject, model)
+        report.findings.extend(found)
+        slack = 8 * block * S + 256
+        if stats.dp_state_bytes > model + slack:
+            report.findings.append(Finding(
+                "PV104", subject,
+                f"planner.inflight_state_bytes(K={K}, block={block}, "
+                f"slots={S}) = {model:,}B does not cover the IR's DP state "
+                f"{stats.dp_state_bytes:,}B (+{slack:,}B slack) — the "
+                f"admission budget would under-account live slot state"))
+        report.stats[subject] = {
+            "retained_bytes": stats.retained_bytes,
+            "dp_state_bytes": stats.dp_state_bytes,
+            "flops": stats.flops,
+            "model_bytes": stats.model_bytes,
+        }
+        report.checks.append(subject)
     return report

@@ -28,7 +28,8 @@ from repro.core import decoder as _decoder
 from repro.core.decoder import ViterbiDecoder
 from repro.core.spec import DecodeSpec, FlashSpec, FusedSpec, VanillaSpec
 
-__all__ = ["RetraceError", "RetraceGuard", "check_retrace", "supported"]
+__all__ = ["RetraceError", "RetraceGuard", "check_retrace",
+           "check_inflight_retrace", "supported"]
 
 
 class RetraceError(AssertionError):
@@ -162,4 +163,72 @@ def check_retrace(specs: tuple[DecodeSpec, ...] = (VanillaSpec(),
                 "positive control failed: a new (T, K) shape bucket did not "
                 "register as a compile — the cache-size probe is broken")
     passed.append("positive control: new shape bucket compiles")
+    return passed
+
+
+def check_inflight_retrace(K: int = 12, block: int = 8,
+                           slots: int = 3) -> list[str]:
+    """Session churn on a live `InflightScheduler` must never recompile.
+
+    The continuous-batching contract: the slot pool's jitted step has one
+    fixed shape `(S, block, K)`, and sessions joining/leaving/forcing a
+    flush only ever change array *contents*.  This battery warms a scheduler
+    (including a forced flush, so the score-masking path is traced), then
+    churns rounds of ragged joins/leaves — exact and bounded-lag mixed —
+    under the cache-size probe.  A second scheduler with a different pool
+    shape is the positive control.
+    """
+    if not supported():
+        return ["skipped: jax.jit has no _cache_size() on this version"]
+    from repro.serving.inflight import InflightScheduler, inflight_jit_fns
+
+    rng = np.random.default_rng(0)
+    log_pi, log_A = _tiny_hmm(K, seed=1)
+    sched = InflightScheduler(log_pi, log_A, max_slots=slots, block=block)
+
+    def em(T, scale=1.0):
+        return (rng.standard_normal((T, K)) * scale).astype(np.float32)
+
+    def churn_round(scale: float, lag: int | None) -> None:
+        sids = [sched.submit(max_lag=(lag if i % 2 else None))
+                for i in range(slots)]
+        for i, sid in enumerate(sids):
+            sched.feed(sid, em(2 * block + i, scale=scale))
+            sched.pump()
+        for sid in sids:
+            sched.finish(sid)
+
+    # warm-up: max_lag=1 on near-flat emissions all but guarantees forced
+    # flushes, so _mask_slot is traced before the guard window opens
+    churn_round(scale=0.01, lag=1)
+    fns = inflight_jit_fns()
+    if _cache_size(fns["mask_slot"]) == 0:
+        raise RetraceError(
+            "inflight warm-up never forced a flush; the battery would not "
+            "cover the score-masking path")
+    before = {k: _cache_size(f) for k, f in fns.items()}
+    churn_round(scale=0.01, lag=1)
+    churn_round(scale=1.0, lag=block)
+    churn_round(scale=1.0, lag=None)
+    after = {k: _cache_size(f) for k, f in fns.items()}
+    grown = {k: after[k] - before[k] for k in after if after[k] > before[k]}
+    if grown:
+        detail = ", ".join(f"{k}: +{v}" for k, v in sorted(grown.items()))
+        raise RetraceError(
+            f"inflight session churn recompiled the slot-pool step: {detail}")
+    passed = [f"inflight join/leave churn no-retrace "
+              f"(S={slots}, block={block}, K={K})"]
+
+    # positive control: a different pool shape MUST compile
+    sched2 = InflightScheduler(log_pi, log_A, max_slots=slots + 1,
+                               block=block)
+    sid = sched2.submit()
+    sched2.feed(sid, em(block + 1))
+    sched2.pump()
+    sched2.finish(sid)
+    if _cache_size(fns["inflight_step"]) <= after["inflight_step"]:
+        raise RetraceError(
+            "positive control failed: a new (S, block, K) pool shape did "
+            "not register as a compile — the cache-size probe is broken")
+    passed.append("positive control: new pool shape compiles")
     return passed

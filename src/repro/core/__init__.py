@@ -11,12 +11,14 @@ from .flash_bs import flash_bs_viterbi
 from .beam_static import beam_static_viterbi, beam_static_mp_viterbi
 from .assoc import viterbi_assoc
 from .online import (OnlineViterbiDecoder, OnlineBeamDecoder,
-                     viterbi_online, viterbi_online_beam)
+                     SlotViterbiDecoder, viterbi_online, viterbi_online_beam)
 from .spec import (ResourceBudget, DecodeSpec, VanillaSpec, CheckpointSpec,
                    FlashSpec, FlashBSSpec, BeamStaticSpec, BeamStaticMPSpec,
                    AssocSpec, FusedSpec, OnlineSpec, OnlineBeamSpec,
                    SPEC_BY_METHOD, spec_from_tunables, as_decode_spec)
-from .planner import (decoder_state_bytes, spec_state_bytes, DecodePlan, plan)
+from .planner import (decoder_state_bytes, spec_state_bytes, DecodePlan, plan,
+                      online_session_bytes, inflight_state_bytes,
+                      AdmissionPlan, plan_admission)
 from .decoder import ViterbiDecoder
 from .api import (viterbi_decode, viterbi_decode_hmm, viterbi_decode_batch,
                   METHODS, BATCH_METHODS)
@@ -29,13 +31,15 @@ __all__ = [
     "flash_viterbi", "plan_padding", "pad_emissions", "chunked_vmap",
     "flash_bs_viterbi", "beam_static_viterbi", "beam_static_mp_viterbi",
     "viterbi_assoc", "OnlineViterbiDecoder", "OnlineBeamDecoder",
-    "viterbi_online", "viterbi_online_beam",
+    "SlotViterbiDecoder", "viterbi_online", "viterbi_online_beam",
     # typed spec / planner / decoder API
     "ResourceBudget", "DecodeSpec", "VanillaSpec", "CheckpointSpec",
     "FlashSpec", "FlashBSSpec", "BeamStaticSpec", "BeamStaticMPSpec",
     "AssocSpec", "FusedSpec", "OnlineSpec", "OnlineBeamSpec",
     "SPEC_BY_METHOD", "spec_from_tunables", "as_decode_spec",
     "decoder_state_bytes", "spec_state_bytes", "DecodePlan", "plan",
+    "online_session_bytes", "inflight_state_bytes",
+    "AdmissionPlan", "plan_admission",
     "ViterbiDecoder",
     # legacy string dispatch (thin shim over the specs)
     "viterbi_decode", "viterbi_decode_hmm", "viterbi_decode_batch",

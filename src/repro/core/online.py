@@ -211,7 +211,46 @@ class _StreamingDecoder:
 # Exact streaming decoder
 # ---------------------------------------------------------------------------
 
-class OnlineViterbiDecoder(_StreamingDecoder):
+class _ExactWindow(_StreamingDecoder):
+    """Window plumbing shared by the exact decoders (identities == states).
+
+    Subclasses own the DP frontier (`_frontier_best`) and how an
+    inconsistency mask reaches the scores (`_mask_inconsistent`); this base
+    owns the (W, K) backpointer window itself.
+    """
+
+    K: int
+
+    def __init__(self, max_lag: int | None):
+        super().__init__(max_lag)
+        self._psis: list[np.ndarray] = []   # each (c, K); together rows base..t-1
+
+    def _rows(self) -> list[np.ndarray]:
+        if len(self._psis) > 1:
+            self._psis = [np.concatenate(self._psis, axis=0)]
+        return self._psis[0] if self._psis else []
+
+    def _drop_rows(self, n: int) -> None:
+        if n and self._psis:
+            self._psis = [self._psis[0][n:]]
+
+    def _identity_to_state(self, i, ident: int) -> int:
+        return int(ident)   # identities *are* states in the exact decoders
+
+    def _ancestor_keep(self, f_state: int) -> np.ndarray:
+        """(K,) bool: which frontier states trace back to ``f_state``."""
+        anc = np.arange(self.K)
+        for row in reversed(self._rows()):
+            anc = row[anc]
+        return anc == f_state
+
+    def live_state_bytes(self) -> int:
+        """Current live decoder state (the Fig. 11 memory metric)."""
+        rows = self._rows()
+        return len(rows) * self.K * 4 + self.K * 8
+
+
+class OnlineViterbiDecoder(_ExactWindow):
     """Incremental exact Viterbi: feed (C, K) chunks, get committed prefixes.
 
         dec = OnlineViterbiDecoder(log_pi, log_A)
@@ -233,33 +272,16 @@ class OnlineViterbiDecoder(_StreamingDecoder):
         self.K = int(self.log_A.shape[0])
         self.bt = bt
         self._delta: jax.Array | None = None
-        self._psis: list[np.ndarray] = []   # each (c, K); together rows base..t-1
 
     # -- window plumbing ----------------------------------------------------
-    def _rows(self) -> list[np.ndarray]:
-        if len(self._psis) > 1:
-            self._psis = [np.concatenate(self._psis, axis=0)]
-        return self._psis[0] if self._psis else []
-
-    def _drop_rows(self, n: int) -> None:
-        if n and self._psis:
-            self._psis = [self._psis[0][n:]]
-
     def _frontier_best(self) -> tuple[int, float]:
         # flashlint: disable=FL002(commit point: one batched frontier transfer instead of two scalar syncs)
         delta = jax.device_get(self._delta)
         q = int(delta.argmax())
         return q, float(delta[q])
 
-    def _identity_to_state(self, i, ident: int) -> int:
-        return int(ident)   # identities *are* states in the exact decoder
-
     def _mask_inconsistent(self, f_state: int) -> None:
-        rows = self._rows()
-        anc = np.arange(self.K)
-        for i in range(len(rows) - 1, -1, -1):
-            anc = rows[i][anc]
-        keep = jnp.asarray(anc == f_state)
+        keep = jnp.asarray(self._ancestor_keep(f_state))
         self._delta = jnp.where(keep, self._delta, self._delta + 4.0 * NEG_INF)
 
     # -- feeding ------------------------------------------------------------
@@ -282,10 +304,108 @@ class OnlineViterbiDecoder(_StreamingDecoder):
             self._t += int(em_chunk.shape[0])
         return self._after_feed()
 
-    def live_state_bytes(self) -> int:
-        """Current live decoder state (the Fig. 11 memory metric)."""
-        rows = self._rows()
-        return len(rows) * self.K * 4 + self.K * 8
+
+# ---------------------------------------------------------------------------
+# Externally-advanced slot decoder (the inflight serving tier's per-slot view)
+# ---------------------------------------------------------------------------
+
+class SlotViterbiDecoder(_ExactWindow):
+    """Exact commit machinery for a decode whose DP advance happens elsewhere.
+
+    The inflight scheduler (`serving.inflight`) advances *all* of its slots
+    with one batched kernel call per block; each slot then owns only the
+    host-side window bookkeeping.  This class is that bookkeeping: the same
+    convergence-commit / forced-flush algebra as `OnlineViterbiDecoder`
+    (bit-identical, because the DP itself is the same per-step recurrence —
+    the batched kernel is pinned bit-identical per sequence to the single-
+    sequence kernel), minus any device state of its own.
+
+    The two device touch-points are injected:
+
+      frontier()      -> (K,) host array: this slot's current delta row.
+                         Pulled only at flush / forced-flush time.
+      mask_scores(keep (K,) bool) -> None: suppress frontier hypotheses whose
+                         ancestor is inconsistent with a forced commit
+                         (the scheduler applies it to its batched delta).
+
+    Lifecycle: ``seed()`` once the first frame's delta row has been placed
+    (t becomes 1), then ``ingest(psi_rows)`` after every externally-computed
+    block advance; ``flush()`` (inherited) finishes.  ``save_state()`` /
+    ``restore_state()`` round-trip the full host-side window so a slot can be
+    checkpointed or migrated without replaying the stream.
+    """
+
+    def __init__(self, K: int, *, max_lag: int | None = None,
+                 frontier=None, mask_scores=None):
+        super().__init__(max_lag)
+        self.K = int(K)
+        if frontier is None:
+            raise ValueError("SlotViterbiDecoder needs a frontier() callback")
+        self._frontier = frontier
+        self._mask_scores = mask_scores
+
+    # -- external-advance surface -------------------------------------------
+    def seed(self) -> None:
+        """Mark the slot live: the caller just placed delta_0 for frame 0."""
+        if self._finished:
+            raise RuntimeError("slot decoder already flushed")
+        if self._t:
+            raise RuntimeError("slot decoder already seeded")
+        self._t = 1
+
+    def ingest(self, psi_rows: np.ndarray) -> np.ndarray:
+        """Append externally-computed backpointer rows; commit what is final.
+
+        ``psi_rows`` is (n, K) int32 mapping states at the n newly-fed steps
+        to their predecessors (exactly `viterbi_chunk_step`'s psi output for
+        this slot).  Returns the newly-committed states, like ``feed``.
+        """
+        if self._finished:
+            raise RuntimeError("slot decoder already flushed")
+        if self._t == 0:
+            raise RuntimeError("slot decoder not seeded; call seed() first")
+        # flashlint: disable=FL002(psi rows are already host numpy — the scheduler batched the transfer)
+        psi_rows = np.asarray(psi_rows, np.int32)
+        if psi_rows.ndim != 2 or psi_rows.shape[1] != self.K:
+            raise ValueError(f"expected (n, K={self.K}) psi rows, "
+                             f"got {psi_rows.shape}")
+        if psi_rows.shape[0] == 0:
+            return np.zeros((0,), np.int32)
+        self._psis.append(psi_rows)
+        self._t += int(psi_rows.shape[0])
+        return self._after_feed()
+
+    # -- _StreamingDecoder surface ------------------------------------------
+    def _frontier_best(self) -> tuple[int, float]:
+        # flashlint: disable=FL002(commit point: the injected frontier callback is the one batched row transfer)
+        row = np.asarray(self._frontier())
+        q = int(row.argmax())
+        return q, float(row[q])
+
+    def _mask_inconsistent(self, f_state: int) -> None:
+        if self._mask_scores is None:
+            raise RuntimeError(
+                "forced flush needs a mask_scores callback (max_lag is set "
+                "but the scheduler did not wire score masking)")
+        self._mask_scores(self._ancestor_keep(f_state))
+
+    # -- checkpoint / migration ---------------------------------------------
+    def save_state(self) -> dict:
+        """Host-side window snapshot (the device delta row is the caller's)."""
+        return {"committed": list(self._committed), "t": self._t,
+                "base": self._base, "finished": self._finished,
+                "score": self.score, "stats": dict(self.stats),
+                "psis": [p.copy() for p in self._psis]}
+
+    def restore_state(self, state: dict) -> None:
+        self._committed = list(state["committed"])
+        self._t = int(state["t"])
+        self._base = int(state["base"])
+        self._finished = bool(state["finished"])
+        self.score = state["score"]
+        self.stats = dict(state["stats"])
+        # flashlint: disable=FL002(restoring a host-side snapshot, no device data involved)
+        self._psis = [np.asarray(p, np.int32).copy() for p in state["psis"]]
 
 
 # ---------------------------------------------------------------------------
@@ -442,5 +562,5 @@ def viterbi_online_beam(log_pi, log_A, em, *, beam_width: int = 128,
     return jnp.asarray(dec.path), jnp.asarray(score, dtype=jnp.float32)
 
 
-__all__ = ["OnlineViterbiDecoder", "OnlineBeamDecoder",
+__all__ = ["OnlineViterbiDecoder", "OnlineBeamDecoder", "SlotViterbiDecoder",
            "viterbi_online", "viterbi_online_beam"]

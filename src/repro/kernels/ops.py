@@ -137,6 +137,32 @@ def viterbi_chunk_step(log_A: jax.Array, em_chunk: jax.Array, delta: jax.Array,
     return viterbi_forward(log_A, em_chunk, delta, bt=bt, interpret=interpret)
 
 
+def viterbi_slot_step(log_A: jax.Array, em: jax.Array, delta: jax.Array,
+                      nfeed: jax.Array, *, bt: int = 8,
+                      interpret: bool | None = None):
+    """One inflight-batching advance: carry S slot deltas through a block.
+
+    This is the slot-masked block step the continuous-batching scheduler
+    issues once per `step()`: `em` is (S, block, K) with slot s holding
+    `nfeed[s]` real emission rows (0 <= nfeed[s] <= block) followed by
+    arbitrary padding.  Slots with `nfeed[s] == 0` — free slots, or live
+    slots with nothing buffered — run the whole block as tropical-identity
+    steps: their delta comes back bit-identical and their psi rows are the
+    identity permutation.  Because the shapes (S, block, K) are fixed for
+    the scheduler's lifetime, sessions joining and leaving only ever change
+    array *contents*, so this traces exactly once (pinned by the retrace
+    battery).
+
+    Per-slot results are bit-identical to `viterbi_chunk_step` on the
+    unpadded prefix (the batch-grid kernel's per-sequence equivalence is
+    pinned by the PR 2 tests).
+
+    Returns (psi (S, block, K) int32, delta' (S, K)).
+    """
+    return viterbi_forward_batch(log_A, em, delta, nfeed, bt=bt,
+                                 interpret=interpret)
+
+
 def viterbi_decode_fused(log_pi: jax.Array, log_A: jax.Array, em: jax.Array,
                          *, bt: int = 8, interpret: bool | None = None):
     """Full Viterbi decode using the fused forward kernel + XLA backtracking."""
@@ -209,5 +235,5 @@ def beam_step(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
 
 
 __all__ = ["tropical_matmul", "viterbi_forward", "viterbi_forward_batch",
-           "viterbi_chunk_step", "viterbi_decode_fused",
+           "viterbi_chunk_step", "viterbi_slot_step", "viterbi_decode_fused",
            "viterbi_decode_fused_batch", "beam_step"]

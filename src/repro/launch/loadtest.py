@@ -63,6 +63,7 @@ from repro.serving.stream import StreamMux
 __all__ = [
     "VirtualClock", "LoadConfig", "LoadEvent", "Workload", "make_workload",
     "resolve_spec", "oracle_check", "LoadHarness", "WorkerDied",
+    "peak_concurrency", "run_inflight_compare",
     "drill_worker_death", "drill_mesh_rescale", "drill_budget_shrink",
     "run_drill", "DRILLS", "main",
 ]
@@ -130,6 +131,8 @@ class LoadConfig:
     method: str = "flash"               # offline spec when budget_kb is None
     budget_kb: float | None = None      # planner path: budget -> spec
     check_oracle: bool = True
+    inflight: bool = False              # continuous batching for streams
+    inflight_slots: int = 64            # slot-pool size when inflight
 
     def __post_init__(self):
         if not 0.0 <= self.stream_frac <= 1.0:
@@ -304,14 +307,22 @@ class LoadHarness:
         self.sched = BatchScheduler(self.head, max_batch=cfg.max_batch,
                                     buckets=cfg.buckets)
         self.stream_spec = OnlineSpec(stream_chunk=cfg.stream_chunk)
+        self.inflight = None
+        if cfg.inflight:
+            from repro.serving.inflight import InflightScheduler
+            self.inflight = InflightScheduler(
+                hmm.log_pi, hmm.log_A, max_slots=cfg.inflight_slots,
+                block=cfg.stream_block)
         self.mux = StreamMux(hmm.log_pi, hmm.log_A, self.stream_spec,
-                             blocks=(cfg.stream_block,))
+                             blocks=(cfg.stream_block,),
+                             inflight=self.inflight)
         self.results: dict[int, tuple] = {}         # offline rid -> result
         self.stream_results: dict[int, tuple] = {}  # stream rid -> result
         self.duplicates = 0
         self.batches = 0
         self.latency = {"offline": [], "stream_first_commit": [],
-                        "stream_finish": []}
+                        "stream_finish": [], "stream_feed": []}
+        self.lag_frames: list[float] = []
         self._arrival: dict[int, float] = {}
         self._rid_of: dict[int, int] = {}           # scheduler rid -> load rid
         self._sid_of: dict[int, int] = {}           # load rid -> mux sid
@@ -356,7 +367,10 @@ class LoadHarness:
         self._sid_of[ev.rid] = self.mux.open(block=self.cfg.stream_block)
 
     def _on_feed(self, ev: LoadEvent) -> None:
+        t_before = self.clock.now()
         out = self._timed(self.mux.feed, self._sid_of[ev.rid], ev.frames)
+        self.latency["stream_feed"].append(self.clock.now() - t_before)
+        self.lag_frames.append(float(out["lag"]))
         if out["committed"].shape[0] and ev.rid not in self._first_commit:
             self._first_commit.add(ev.rid)
             self.latency["stream_first_commit"].append(
@@ -409,8 +423,11 @@ class LoadHarness:
                               float(np.mean(self.sched.stats["padded_frac"]))
                               if self.sched.stats["padded_frac"] else 0.0},
             "stream": {**{k: int(v) for k, v in self.mux.stats.items()},
-                       "peak_live_state_bytes": int(self.peak_stream_bytes)},
+                       "peak_live_state_bytes": int(self.peak_stream_bytes),
+                       "commit_lag_frames": _pct(self.lag_frames)},
         }
+        if self.inflight is not None:
+            rep["inflight"] = self.inflight.slo_report()
         if cfg.check_oracle:
             hmm = self.work.hmm
             off_payloads = {r: self.work.payloads[r] for r in self.results}
@@ -422,6 +439,83 @@ class LoadHarness:
             rep["oracle"] = {"offline": off, "stream": st,
                              "ok": off["ok"] and st["ok"]}
         return rep
+
+
+# ---------------------------------------------------------------------------
+# Inflight vs. bucketed comparison
+# ---------------------------------------------------------------------------
+
+DEFAULT_INFLIGHT_OUT = os.path.join("benchmarks", "out", "inflight.json")
+
+
+def peak_concurrency(work: Workload) -> int:
+    """Max sessions simultaneously open in the trace (streams only)."""
+    live = peak = 0
+    for ev in work.events:
+        if ev.kind == "open":
+            live += 1
+            peak = max(peak, live)
+        elif ev.kind == "finish":
+            live -= 1
+    return peak
+
+
+def run_inflight_compare(cfg: LoadConfig) -> dict:
+    """Drive the *same* seeded MMPP trace through bucketed and inflight muxing.
+
+    Both runs are all-streaming (`stream_frac=1.0`) and oracle-checked; the
+    report carries p50/p99 feed/block latency, commit lag, and session
+    first-commit/completion latency for each side, plus the head-to-head
+    p99-completion verdict and the retrace count across the inflight run's
+    session churn (must be zero — joins/leaves only change array contents).
+    """
+    from repro.serving.inflight import inflight_jit_fns
+
+    base = dataclasses.replace(cfg, stream_frac=1.0, inflight=False)
+    work = make_workload(base)
+    concurrency = peak_concurrency(work)
+
+    bucketed = LoadHarness(base, workload=work).run()
+
+    infl_cfg = dataclasses.replace(base, inflight=True)
+    harness = LoadHarness(infl_cfg, workload=work)
+    # warm the slot pool once so the comparison (and the retrace count)
+    # excludes first-trace compilation
+    warm = harness.inflight.submit()
+    harness.inflight.feed(
+        warm, np.zeros((infl_cfg.stream_block + 1, cfg.states), np.float32))
+    harness.inflight.pump()
+    harness.inflight.finish(warm)
+    cache0 = {k: f._cache_size() for k, f in inflight_jit_fns().items()}
+    inflight = harness.run()
+    cache1 = {k: f._cache_size() for k, f in inflight_jit_fns().items()}
+    retraces = sum(cache1[k] - cache0[k] for k in cache0)
+
+    def side(rep):
+        return {"feed_latency_s": rep["latency_s"]["stream_feed"],
+                "first_commit_s": rep["latency_s"]["stream_first_commit"],
+                "completion_s": rep["latency_s"]["stream_finish"],
+                "commit_lag_frames": rep["stream"]["commit_lag_frames"],
+                "throughput": rep["throughput"],
+                "oracle_ok": rep.get("oracle", {}).get("ok"),
+                "stream_stats": rep["stream"]}
+
+    b, i = side(bucketed), side(inflight)
+    p99_b = (b["completion_s"] or {}).get("p99", float("nan"))
+    p99_i = (i["completion_s"] or {}).get("p99", float("nan"))
+    return {
+        "config": dataclasses.asdict(infl_cfg),
+        "peak_concurrent_sessions": concurrency,
+        "bucketed": b,
+        "inflight": {**i, "slo": inflight.get("inflight"),
+                     "retraces_across_churn": int(retraces)},
+        "p99_completion_s": {"bucketed": p99_b, "inflight": p99_i,
+                             "speedup": (p99_b / p99_i if p99_i else
+                                         float("nan"))},
+        "p99_completion_win": bool(p99_i < p99_b),
+        "oracle_ok": bool(b["oracle_ok"] and i["oracle_ok"]),
+        "retraces": int(retraces),
+    }
 
 
 # ---------------------------------------------------------------------------
@@ -739,14 +833,47 @@ def main(argv=None):
                     help="skip the reference-oracle pass (pure perf run)")
     ap.add_argument("--drill", choices=["none", "all", *DRILLS],
                     default="none")
+    ap.add_argument("--inflight", action="store_true",
+                    help="run the inflight-vs-bucketed streaming comparison "
+                         "instead of the mixed harness; writes --inflight-out")
+    ap.add_argument("--inflight-slots", type=int, default=64)
+    ap.add_argument("--interarrival-us", type=float, default=None,
+                    help="override mean interarrival (microseconds) — drive "
+                         "this down to pile up concurrent sessions")
+    ap.add_argument("--inflight-out", default=DEFAULT_INFLIGHT_OUT)
     ap.add_argument("--out", default=DEFAULT_OUT)
     args = ap.parse_args(argv)
 
+    overrides = {}
+    if args.interarrival_us is not None:
+        overrides["mean_interarrival_s"] = args.interarrival_us * 1e-6
     cfg = LoadConfig(seed=args.seed, requests=args.requests,
                      states=args.states, stream_frac=args.stream_frac,
                      method=args.method, budget_kb=args.budget_kb,
                      max_batch=args.max_batch,
-                     check_oracle=not args.no_oracle)
+                     check_oracle=not args.no_oracle,
+                     inflight_slots=args.inflight_slots, **overrides)
+
+    if args.inflight:
+        report = run_inflight_compare(cfg)
+        p99 = report["p99_completion_s"]
+        print(f"inflight compare: {cfg.requests} streaming sessions, peak "
+              f"concurrency {report['peak_concurrent_sessions']}, "
+              f"{cfg.inflight_slots} slots")
+        print(f"  p99 completion: bucketed {p99['bucketed'] * 1e3:.1f}ms vs "
+              f"inflight {p99['inflight'] * 1e3:.1f}ms "
+              f"(speedup {p99['speedup']:.2f}x, "
+              f"win={report['p99_completion_win']})")
+        print(f"  oracle ok={report['oracle_ok']}, "
+              f"retraces across churn={report['retraces']}")
+        os.makedirs(os.path.dirname(args.inflight_out) or ".", exist_ok=True)
+        with open(args.inflight_out, "w") as f:
+            json.dump(report, f, indent=2, default=str)
+        print(f"  wrote {args.inflight_out}")
+        if not report["oracle_ok"] or report["retraces"]:
+            raise SystemExit(1)
+        return report
+
     harness = LoadHarness(cfg)
     report = harness.run()
 

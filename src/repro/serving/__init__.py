@@ -1,7 +1,10 @@
-"""repro.serving — batch (scheduler/alignment) and streaming (stream) decode."""
+"""repro.serving — batch (scheduler/alignment), streaming (stream), and
+continuous inflight batching (inflight) decode tiers."""
 
 from .scheduler import Request, BatchScheduler
 from .stream import StreamConfig, StreamSession, StreamMux
+from .inflight import InflightScheduler, AdmissionRejected
 
 __all__ = ["Request", "BatchScheduler",
-           "StreamConfig", "StreamSession", "StreamMux"]
+           "StreamConfig", "StreamSession", "StreamMux",
+           "InflightScheduler", "AdmissionRejected"]

@@ -145,17 +145,30 @@ class StreamMux:
     step, and per-bucket round-robin keeps the jit cache and the device warm
     under mixed traffic.  (State stays per-session — streaming DP carries are
     stateful — so the win is shape bucketing, not cross-session batching.)
+
+    Bucketing has head-of-line blocking baked in: a session joining
+    mid-flight buffers until its bucket's block fills.  Pass ``inflight=``
+    (an `serving.inflight.InflightScheduler`) and exact/lagged ``"online"``
+    sessions are routed straight into the continuous-batching tier instead —
+    served within one *block* of arrival, one batched kernel call per step
+    regardless of how many sessions are live.  ``"online_beam"`` sessions
+    (and everything when no scheduler is configured) keep the bucketing
+    path, so the old behavior is the fallback, not a casualty.
     """
 
     def __init__(self, log_pi, log_A, cfg: StreamConfig = StreamConfig(),
-                 blocks: tuple[int, ...] = (32, 128, 512)):
+                 blocks: tuple[int, ...] = (32, 128, 512),
+                 inflight=None):
         self.log_pi = log_pi
         self.log_A = log_A
         self.cfg = cfg
         self.blocks = tuple(sorted(blocks))
+        self.inflight = inflight
+        self._routed: dict[int, int] = {}   # mux sid -> inflight sid
         self._sessions: dict[int, StreamSession] = {}
         self._ids = itertools.count()
-        self.stats = {"opened": 0, "finished": 0, "frames": 0, "commits": 0}
+        self.stats = {"opened": 0, "finished": 0, "frames": 0, "commits": 0,
+                      "routed_inflight": 0}
 
     def _bucket(self, block: int) -> int:
         for b in self.blocks:
@@ -163,8 +176,16 @@ class StreamMux:
                 return b
         return self.blocks[-1]
 
+    def _route_inflight(self) -> bool:
+        return (self.inflight is not None and self.cfg.method == "online")
+
     def open(self, block: int = 128) -> int:
         sid = next(self._ids)
+        if self._route_inflight():
+            self._routed[sid] = self.inflight.submit(max_lag=self.cfg.max_lag)
+            self.stats["opened"] += 1
+            self.stats["routed_inflight"] += 1
+            return sid
         self._sessions[sid] = StreamSession(
             self.log_pi, self.log_A, self.cfg,
             block=self._bucket(block), sid=sid)
@@ -179,6 +200,15 @@ class StreamMux:
                            ) from None
 
     def feed(self, sid: int, frames) -> dict:
+        if sid in self._routed:
+            isid = self._routed[sid]
+            self.inflight.feed(isid, frames)
+            self.inflight.pump()
+            committed = self.inflight.collect(isid)
+            self.stats["frames"] += int(np.asarray(frames).shape[0])
+            self.stats["commits"] += int(committed.shape[0])
+            return {"committed": committed, "lag": self.inflight.lag(isid),
+                    "n_committed": self.inflight.n_committed(isid)}
         sess = self._session(sid)
         committed = sess.feed(frames)
         self.stats["frames"] += int(np.asarray(frames).shape[0])
@@ -187,6 +217,10 @@ class StreamMux:
                 "n_committed": sess.decoder.n_committed}
 
     def finish(self, sid: int) -> tuple[np.ndarray, float]:
+        if sid in self._routed:
+            isid = self._routed.pop(sid)
+            self.stats["finished"] += 1
+            return self.inflight.finish(isid)
         sess = self._session(sid)
         del self._sessions[sid]
         self.stats["finished"] += 1
@@ -199,7 +233,10 @@ class StreamMux:
         return out
 
     def live_state_bytes(self) -> int:
-        return sum(s.live_state_bytes() for s in self._sessions.values())
+        total = sum(s.live_state_bytes() for s in self._sessions.values())
+        if self.inflight is not None:
+            total += self.inflight.live_state_bytes()
+        return total
 
 
 __all__ = ["StreamConfig", "StreamSession", "StreamMux"]

@@ -1,0 +1,335 @@
+"""Continuous inflight batching: the slot-pool serving tier.
+
+The load-bearing invariants, in rough order of importance:
+
+  * every delivered path is **bit-identical** to the looped unbatched
+    `session_spec(sid).run` oracle — exact sessions at any feed granularity,
+    bounded-lag sessions at the oracle's block boundaries;
+  * `collect` is exactly-once: concatenating every drain plus the finish
+    tail reproduces the full path, and a second drain is empty;
+  * slot reuse never leaks state between consecutive occupants;
+  * admission never lets projected session bytes exceed the `ResourceBudget`,
+    degrading down the lag ladder before queueing and queueing before
+    rejecting;
+  * the queue is FIFO within a priority class;
+  * join/leave churn never recompiles the fixed-shape slot step.
+"""
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import (ResourceBudget, erdos_renyi_hmm, random_emissions,
+                        online_session_bytes, viterbi_vanilla)
+from repro.serving import (AdmissionRejected, InflightScheduler, StreamConfig,
+                           StreamMux)
+from repro.serving.inflight import inflight_jit_fns
+
+
+@pytest.fixture(scope="module")
+def hmm():
+    return erdos_renyi_hmm(jax.random.key(7), 24, edge_prob=0.4)
+
+
+def _ems(hmm, lengths, seed=0, scale=2.0):
+    key = jax.random.key(seed)
+    return [np.asarray(random_emissions(k, T, hmm.log_pi.shape[0],
+                                        scale=scale))
+            for k, T in zip(jax.random.split(key, len(lengths)), lengths)]
+
+
+# -- bit-identity against the unbatched oracle ------------------------------
+
+def test_exact_sessions_bit_identical_any_granularity(hmm):
+    """Exact sessions fed at ragged granularities across a shared pool must
+    each reproduce the offline optimal decode bit-for-bit."""
+    lengths = [37, 80, 9, 64, 33]
+    ems = _ems(hmm, lengths)
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=3, block=16)
+    sids = [sched.submit() for _ in ems]
+    cursors = [0] * len(ems)
+    feeds = [5, 16, 3, 16, 11]
+    while any(c < e.shape[0] for c, e in zip(cursors, ems)):
+        for i, sid in enumerate(sids):
+            c, step = cursors[i], feeds[i]
+            if c < ems[i].shape[0]:
+                sched.feed(sid, ems[i][c:c + step])
+                cursors[i] = min(c + step, ems[i].shape[0])
+        sched.pump()
+    for sid, em in zip(sids, ems):
+        path, score = sched.finish(sid)
+        ref_path, ref_score = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+        assert np.array_equal(path, np.asarray(ref_path))
+        assert float(score) == float(ref_score)
+
+
+@pytest.mark.parametrize("max_lag", [2, 8])
+def test_lagged_sessions_match_online_spec_oracle(hmm, max_lag):
+    """Bounded-lag sessions must replicate the forced-flush boundaries of
+    `OnlineSpec(stream_chunk=block, max_lag=L).run` exactly — weak-evidence
+    emissions so forced flushes actually fire."""
+    ems = _ems(hmm, [70, 41, 66], seed=3, scale=0.2)
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=3, block=8)
+    sids = [sched.submit(max_lag=max_lag) for _ in ems]
+    for sid, em in zip(sids, ems):
+        sched.feed(sid, em)
+    sched.pump()
+    forced = 0
+    for sid, em in zip(sids, ems):
+        spec = sched.session_spec(sid)
+        assert spec.stream_chunk == 8 and spec.max_lag == max_lag
+        path, score = sched.finish(sid)
+        ref_path, ref_score = spec.run(hmm.log_pi, hmm.log_A, em)
+        assert np.array_equal(path, np.asarray(ref_path))
+        assert float(score) == float(ref_score)
+        forced += sched._sessions[sid].dec.stats["forced"]
+    assert forced > 0, "workload never forced a flush; oracle untested"
+
+
+def test_mixed_exact_and_lagged_pool(hmm):
+    """Exact and bounded-lag sessions sharing the same batched state must
+    not perturb each other."""
+    ems = _ems(hmm, [50, 50, 50, 50], seed=9, scale=0.3)
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=4, block=8)
+    lags = [None, 4, None, 4]
+    sids = [sched.submit(max_lag=m) for m in lags]
+    for sid, em in zip(sids, ems):
+        sched.feed(sid, em)
+        sched.pump()
+    for sid, em in zip(sids, ems):
+        path, score = sched.finish(sid)
+        ref_path, ref_score = sched.session_spec(sid).run(
+            hmm.log_pi, hmm.log_A, em)
+        assert np.array_equal(path, np.asarray(ref_path))
+        assert float(score) == float(ref_score)
+
+
+# -- delivery semantics -----------------------------------------------------
+
+def test_collect_is_exactly_once(hmm):
+    em = _ems(hmm, [61])[0]
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=2, block=16)
+    sid = sched.submit()
+    got = []
+    for s in range(0, 61, 16):
+        sched.feed(sid, em[s:s + 16])
+        sched.pump()
+        seg = sched.collect(sid)
+        got.append(seg)
+        assert sched.collect(sid).shape[0] == 0     # drained: second is empty
+    path, _ = sched.finish(sid)
+    got.append(sched.collect(sid))                  # the flush tail
+    assert sched.collect(sid).shape[0] == 0
+    assert np.array_equal(np.concatenate(got), path)
+    ref_path, _ = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    assert np.array_equal(path, np.asarray(ref_path))
+
+
+def test_finish_is_idempotent_and_feed_after_finish_raises(hmm):
+    em = _ems(hmm, [20])[0]
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=1, block=8)
+    sid = sched.submit()
+    sched.feed(sid, em)
+    first = sched.finish(sid)
+    again = sched.finish(sid)
+    assert np.array_equal(first[0], again[0]) and first[1] == again[1]
+    with pytest.raises(RuntimeError, match="finished"):
+        sched.feed(sid, em[:1])
+
+
+def test_slot_reuse_never_leaks_state(hmm):
+    """Three consecutive occupants of the single slot each decode as if the
+    pool were freshly built."""
+    ems = _ems(hmm, [45, 30, 77], seed=5)
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=1, block=16)
+    for em in ems:
+        sid = sched.submit()
+        assert sched.live_sessions() == [sid]       # single slot, reused
+        sched.feed(sid, em)
+        sched.pump()
+        path, score = sched.finish(sid)
+        ref_path, ref_score = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+        assert np.array_equal(path, np.asarray(ref_path))
+        assert float(score) == float(ref_score)
+
+
+# -- admission control ------------------------------------------------------
+
+def test_admission_never_exceeds_budget(hmm):
+    K, block = 24, 8
+    per = online_session_bytes(K, block, max_lag=32)
+    cap = 2 * per + per // 2                        # fits 2 requested, not 3
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=8, block=block,
+                              budget=ResourceBudget(memory_bytes=cap),
+                              default_max_lag=32)
+    sids = [sched.submit() for _ in range(5)]
+    assert sched.admitted_bytes() <= cap
+    ems = _ems(hmm, [40] * 5, seed=11)
+    for sid, em in zip(sids, ems):
+        sched.feed(sid, em)
+        sched.pump()
+        assert sched.admitted_bytes() <= cap
+    for sid, em in zip(sids, ems):
+        path, _ = sched.finish(sid)
+        assert sched.admitted_bytes() <= cap
+        ref_path, _ = sched.session_spec(sid).run(hmm.log_pi, hmm.log_A, em)
+        assert np.array_equal(path, np.asarray(ref_path))
+    assert sched.admitted_bytes() == 0
+    # the budget actually bit: some sessions had to wait or degrade
+    assert sched.stats["queued_peak"] > 0 or sched.stats["degraded"] > 0
+
+
+def test_admission_degrades_before_queueing(hmm):
+    """A session whose requested lag doesn't fit is degraded down the ladder
+    (tighter max_lag = smaller window) instead of being parked."""
+    K, block = 24, 8
+    cap = online_session_bytes(K, block, max_lag=64)
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=2, block=block,
+                              budget=ResourceBudget(memory_bytes=cap))
+    sid = sched.submit(max_lag=1024)                # too wide as requested
+    sess = sched._sessions[sid]
+    assert sess.slot is not None                    # admitted, not queued
+    assert sess.max_lag is not None and sess.max_lag < 1024
+    assert sched.stats["degraded"] == 1
+
+
+def test_admission_rejects_impossible_session(hmm):
+    cap = online_session_bytes(24, 8, max_lag=8) - 1   # below tightest rung
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=2, block=8,
+                              budget=ResourceBudget(memory_bytes=cap))
+    with pytest.raises(AdmissionRejected):
+        sched.submit()
+    assert sched.stats["rejected"] == 1
+
+
+def test_queued_session_still_finishes(hmm):
+    """A session the budget never let into the pool is decoded at finish via
+    the unbatched overflow path — liveness under overload."""
+    K, block = 24, 8
+    cap = online_session_bytes(K, block, max_lag=8)    # exactly one session
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=4, block=block,
+                              budget=ResourceBudget(memory_bytes=cap),
+                              default_max_lag=8)
+    a, b = sched.submit(), sched.submit()
+    assert sched.queued_sessions() == [b]
+    ems = _ems(hmm, [30, 30], seed=13)
+    sched.feed(a, ems[0])
+    sched.feed(b, ems[1])
+    sched.pump()
+    path_b, _ = sched.finish(b)                        # finished while queued
+    assert sched.stats["overflow_finishes"] == 1
+    ref_b, _ = sched.session_spec(b).run(hmm.log_pi, hmm.log_A, ems[1])
+    assert np.array_equal(path_b, np.asarray(ref_b))
+    path_a, _ = sched.finish(a)
+    ref_a, _ = sched.session_spec(a).run(hmm.log_pi, hmm.log_A, ems[0])
+    assert np.array_equal(path_a, np.asarray(ref_a))
+
+
+def test_fifo_within_priority_class(hmm):
+    """With one slot, same-class sessions attach strictly in arrival order;
+    a lower-value priority always preempts the queue head position."""
+    K, block = 24, 8
+    cap = online_session_bytes(K, block, max_lag=8)
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=1, block=block,
+                              budget=ResourceBudget(memory_bytes=cap),
+                              default_max_lag=8)
+    first = sched.submit(priority=1)                  # takes the slot
+    q1 = sched.submit(priority=1)
+    q2 = sched.submit(priority=1)
+    hi = sched.submit(priority=0)                     # better class, arrives last
+    em = _ems(hmm, [12])[0]
+    attach_order = []
+    for _ in range(4):
+        live = sched.live_sessions()
+        assert len(live) == 1
+        sid = live[0]
+        attach_order.append(sid)
+        sched.feed(sid, em)
+        sched.finish(sid)
+    assert attach_order == [first, hi, q1, q2]
+
+
+# -- mux routing ------------------------------------------------------------
+
+def test_mux_routes_online_sessions_into_inflight(hmm):
+    cfg = StreamConfig()
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=2, block=16)
+    mux = StreamMux(hmm.log_pi, hmm.log_A, cfg, inflight=sched)
+    em = _ems(hmm, [50])[0]
+    sid = mux.open()
+    got = []
+    for s in range(0, 50, 16):
+        out = mux.feed(sid, em[s:s + 16])
+        got.append(out["committed"])
+    path, score = mux.finish(sid)
+    assert mux.stats["routed_inflight"] == 1
+    ref_path, ref_score = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+    assert np.array_equal(path, np.asarray(ref_path))
+    assert float(score) == float(ref_score)
+    prefix = np.concatenate([g for g in got if g.shape[0]] or
+                            [np.zeros(0, np.int32)])
+    assert np.array_equal(prefix, path[:prefix.shape[0]])
+
+
+def test_midflight_join_served_within_one_block(hmm):
+    """The head-of-line regression: a session joining while another is
+    mid-flight must get commits after its first fed block — not after the
+    incumbent's bucket drains (the old bucketing behavior)."""
+    cfg = StreamConfig()
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=4, block=16)
+    mux = StreamMux(hmm.log_pi, hmm.log_A, cfg, inflight=sched)
+    ems = _ems(hmm, [200, 40], seed=21)
+    incumbent = mux.open()
+    mux.feed(incumbent, ems[0][:64])                # mid-flight, far from done
+    joiner = mux.open()
+    out = mux.feed(joiner, ems[1][:16])             # exactly one block
+    assert out["n_committed"] > 0, (
+        "joining session starved behind the incumbent: served per-bucket, "
+        "not per-block")
+    # both still decode exactly
+    mux.feed(incumbent, ems[0][64:])
+    mux.feed(joiner, ems[1][16:])
+    for sid, em in ((incumbent, ems[0]), (joiner, ems[1])):
+        path, score = mux.finish(sid)
+        ref_path, ref_score = viterbi_vanilla(hmm.log_pi, hmm.log_A, em)
+        assert np.array_equal(path, np.asarray(ref_path))
+        assert float(score) == float(ref_score)
+
+
+# -- no-retrace -------------------------------------------------------------
+
+def test_join_leave_churn_never_recompiles(hmm):
+    """Session churn on a warm pool must not grow any jit cache (the full
+    battery, including the forced-flush warm-up and positive control, runs
+    under `python -m repro.analysis --retrace-only`)."""
+    fns = inflight_jit_fns()
+    if not callable(getattr(fns["inflight_step"], "_cache_size", None)):
+        pytest.skip("jax.jit has no _cache_size() on this version")
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=3, block=8)
+    warm = sched.submit()
+    sched.feed(warm, _ems(hmm, [17])[0])
+    sched.finish(warm)
+    before = {k: f._cache_size() for k, f in fns.items()}
+    for seed in range(3):
+        ems = _ems(hmm, [25, 11, 19], seed=seed)
+        sids = [sched.submit(max_lag=(8 if i == 1 else None))
+                for i in range(3)]
+        for sid, em in zip(sids, ems):
+            sched.feed(sid, em)
+            sched.pump()
+        for sid in sids:
+            sched.finish(sid)
+    after = {k: f._cache_size() for k, f in fns.items()}
+    assert after == before, f"churn recompiled: {before} -> {after}"
+
+
+def test_slo_report_shape(hmm):
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=2, block=8)
+    sid = sched.submit()
+    sched.feed(sid, _ems(hmm, [20])[0])
+    sched.finish(sid)
+    rep = sched.slo_report()
+    assert rep["block_latency_s"]["count"] == sched.stats["steps"] > 0
+    assert rep["completion_s"]["p50"] >= 0
+    assert rep["stats"]["finished"] == 1
+    assert sched.device_state_bytes() > 0

@@ -1,0 +1,95 @@
+"""Hypothesis property suite for the inflight serving tier.
+
+Randomized session mixes — lengths, lags, feed granularities, priorities,
+budgets — against a fixed 3-slot pool, asserting the same invariants
+`test_inflight.py` pins deterministically: oracle bit-identity, exactly-once
+collection, admission under budget, leak-free slot reuse.
+
+One pool shape (S=3, block=8, K=24) across all examples keeps the jit cache
+warm (see `test_property.py`); everything random is array *contents* and
+schedule order."""
+
+import numpy as np
+import jax
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st, HealthCheck
+
+from repro.core import (ResourceBudget, erdos_renyi_hmm, random_emissions,
+                        online_session_bytes)
+from repro.serving import InflightScheduler
+
+_SETTINGS = dict(max_examples=10, deadline=None,
+                 suppress_health_check=[HealthCheck.too_slow])
+
+
+@pytest.fixture(scope="module")
+def hmm():
+    return erdos_renyi_hmm(jax.random.key(7), 24, edge_prob=0.4)
+
+
+def _ems(hmm, lengths, seed=0, scale=2.0):
+    key = jax.random.key(seed)
+    return [np.asarray(random_emissions(k, T, hmm.log_pi.shape[0],
+                                        scale=scale))
+            for k, T in zip(jax.random.split(key, len(lengths)), lengths)]
+
+
+@st.composite
+def schedules(draw):
+    n = draw(st.integers(2, 4))
+    lengths = [draw(st.sampled_from([7, 18, 33, 49])) for _ in range(n)]
+    lags = [draw(st.sampled_from([None, 4, 16])) for _ in range(n)]
+    feeds = [draw(st.sampled_from([3, 8, 13, 64])) for _ in range(n)]
+    prios = [draw(st.integers(0, 1)) for _ in range(n)]
+    seed = draw(st.integers(0, 2**16))
+    budgeted = draw(st.booleans())
+    return lengths, lags, feeds, prios, seed, budgeted
+
+
+@given(schedules())
+@settings(**_SETTINGS)
+def test_property_random_schedules(hmm, sched_draw):
+    """INVARIANTS under random session mixes on a shared 3-slot pool:
+    bit-identity to each session's oracle, exactly-once collection,
+    admission never exceeding the budget, slot reuse leak-free."""
+    lengths, lags, feeds, prios, seed, budgeted = sched_draw
+    cap = (online_session_bytes(24, 8, max_lag=64) * 2 if budgeted else None)
+    budget = ResourceBudget(memory_bytes=cap) if cap else None
+    sched = InflightScheduler(hmm.log_pi, hmm.log_A, max_slots=3, block=8,
+                              budget=budget)
+    ems = _ems(hmm, lengths, seed=seed, scale=0.5)
+    sids, cursors, collected = [], [0] * len(ems), {}
+    for lag, prio in zip(lags, prios):
+        sid = sched.submit(max_lag=lag, priority=prio)
+        sids.append(sid)
+        collected[sid] = []
+    while any(c < e.shape[0] for c, e in zip(cursors, ems)):
+        for i, sid in enumerate(sids):
+            c, em = cursors[i], ems[i]
+            if c < em.shape[0]:
+                sched.feed(sid, em[c:c + feeds[i]])
+                cursors[i] = min(c + feeds[i], em.shape[0])
+        sched.pump()
+        if cap is not None:
+            assert sched.admitted_bytes() <= cap
+        for sid in sids:
+            seg = sched.collect(sid)
+            if seg.shape[0]:
+                collected[sid].append(seg)
+    for sid, em in zip(sids, ems):
+        path, score = sched.finish(sid)
+        tail = sched.collect(sid)
+        if tail.shape[0]:
+            collected[sid].append(tail)
+        assert sched.collect(sid).shape[0] == 0
+        delivered = (np.concatenate(collected[sid]) if collected[sid]
+                     else np.zeros((0,), np.int32))
+        assert np.array_equal(delivered, path)      # exactly-once, in order
+        ref_path, ref_score = sched.session_spec(sid).run(
+            hmm.log_pi, hmm.log_A, em)
+        assert np.array_equal(path, np.asarray(ref_path))
+        assert float(score) == float(ref_score)
+    assert sched.admitted_bytes() == 0
+    assert len(sched._free) == 3                    # every slot released

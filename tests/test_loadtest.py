@@ -13,7 +13,9 @@ import numpy as np
 import pytest
 
 from repro.launch.loadtest import (LoadConfig, LoadHarness, VirtualClock,
-                                   make_workload, oracle_check, resolve_spec)
+                                   make_workload, oracle_check,
+                                   peak_concurrency, resolve_spec,
+                                   run_inflight_compare)
 
 SMOKE = LoadConfig(seed=3, requests=10, states=16, stream_frac=0.3,
                    lengths=(8, 18, 30), buckets=(32,), max_batch=4,
@@ -139,6 +141,46 @@ def test_budget_planned_harness_passes_oracle():
     assert report["spec"]["planned_why"] is not None
     assert report["oracle"]["ok"]
     assert report["requests"]["delivered"] == cfg.requests
+
+
+# ---------------------------------------------------------------------------
+# Inflight vs bucketed comparison
+# ---------------------------------------------------------------------------
+
+def test_harness_inflight_mode_passes_oracle():
+    """The harness event loop with sessions routed through the inflight
+    tier instead of bucketing: still exactly-once, still oracle-clean."""
+    cfg = dataclasses.replace(SMOKE, stream_frac=1.0, requests=8,
+                              inflight=True, inflight_slots=4)
+    report = LoadHarness(cfg).run()
+    assert report["oracle"]["ok"]
+    assert report["requests"]["delivered"] == cfg.requests
+    assert report["inflight"]["stats"]["finished"] == cfg.requests
+    assert report["inflight"]["block_latency_s"]["count"] > 0
+
+
+def test_run_inflight_compare_smoke():
+    """Both sides of the A/B run the same seeded workload, both pass the
+    oracle, and session churn causes zero retraces of the slot step."""
+    cfg = dataclasses.replace(SMOKE, requests=8, inflight=True,
+                              inflight_slots=4)
+    rep = run_inflight_compare(cfg)
+    assert rep["oracle_ok"]
+    assert rep["retraces"] == 0
+    assert rep["peak_concurrent_sessions"] >= 1
+    for side in ("bucketed", "inflight"):
+        assert rep[side]["oracle_ok"]
+        assert rep[side]["stream_stats"]["finished"] == cfg.requests
+    assert rep["inflight"]["slo"]["stats"]["finished"] >= cfg.requests
+    assert rep["p99_completion_s"]["bucketed"] > 0
+    assert rep["p99_completion_s"]["inflight"] > 0
+    blob = json.dumps(rep, default=str)
+    assert json.loads(blob)["retraces"] == 0
+
+
+def test_peak_concurrency():
+    w = make_workload(dataclasses.replace(SMOKE, stream_frac=1.0))
+    assert 1 <= peak_concurrency(w) <= SMOKE.requests
 
 
 # ---------------------------------------------------------------------------
