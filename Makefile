@@ -5,7 +5,8 @@ PY ?= python
 
 .PHONY: test test-fast test-dist test-drills bench bench-smoke \
 	example-quickstart example-streaming example-batch example-adaptive \
-	serve-smoke loadtest-smoke inflight-smoke lint lint-fast analysis-deep
+	serve-smoke loadtest-smoke inflight-smoke constrained-smoke \
+	lint lint-fast analysis-deep
 
 lint:  # the full gate: flashlint (AST + contracts + retrace) + fast flashprove, then ruff/mypy if installed
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.analysis
@@ -64,6 +65,10 @@ inflight-smoke:  # inflight vs bucketed A/B at high concurrency -> benchmarks/ou
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.launch.loadtest \
 	    --inflight --seed 0 --requests 80 --states 32 --interarrival-us 400 \
 	    --inflight-slots 80
+
+constrained-smoke:  # map-matching example (oracle-checked) + fig13 constrained bench JSON (CI runs this)
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) examples/map_matching.py
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run --only fig13
 
 test-drills:  # fault drills (worker death / mesh rescale / budget shrink) on 8 virtual devices
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} \

@@ -1,0 +1,115 @@
+"""Fig. 13 (beyond-paper): constrained decoding — what a ConstraintSpec buys.
+
+Two tables, written to ``benchmarks/out/fig13_constrained.json``:
+
+* **band rows** — a `BandConstraint` at widths K/4, K/8, K/16 over a dense
+  HMM, comparing the generic constrained path (jitted vanilla over the
+  `constrain_inputs`-masked inputs — what every non-fused method runs) with
+  the sliding-window banded decode (`viterbi_decode_banded`, what
+  `FusedSpec(constraint=band)` runs).  The banded column must win on *both*
+  wall time (Kb^2 vs K^2 work per step) and live state bytes (Kb-wide DP
+  rows vs K-wide rows plus the materialised mask); every row also records an
+  inline bit-identity check of the two paths/scores.
+
+* **lexicon rows** — a `LexiconConstraint` at growing vocabulary sizes:
+  decode time over the masked inputs, the compiled mask bytes the planner
+  charges, and the shrunken live-state count (the quantity `plan` uses to
+  keep exact decoding on the ladder).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (BandConstraint, LexiconConstraint, banded_state_bytes,
+                        constrain_inputs, random_emissions)
+from repro.core.vanilla import viterbi_vanilla
+from repro.kernels.ops import viterbi_decode_banded
+from .common import decoder_state_bytes, emit, timeit
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "out",
+                        "fig13_constrained.json")
+
+
+def _lexicon(n_words: int, states_per_word: int = 4) -> LexiconConstraint:
+    """Disjoint straight-line words over states [0, n_words*states_per_word)."""
+    words = tuple(
+        (tuple(range(w * states_per_word, (w + 1) * states_per_word)),)
+        for w in range(n_words))
+    return LexiconConstraint(words)
+
+
+def run(full: bool = False):
+    K = 256
+    T = 256 if full else 96
+    key = jax.random.key(13)
+    k1, k2, k3 = jax.random.split(key, 3)
+    # dense HMM (every transition finite): the regime the banded window's
+    # bit-identity contract asks for, and the worst case for dense masking
+    log_A = jax.nn.log_softmax(jax.random.normal(k1, (K, K)), axis=1)
+    log_pi = jax.nn.log_softmax(jax.random.normal(k2, (K,)))
+    em = random_emissions(k3, T, K)
+    # band centers: a slow sweep across the state space, like the
+    # map-matching fixes (examples/map_matching.py)
+    centers = tuple(int(c) for c in
+                    jnp.linspace(0, K - 1, T).round().astype(int))
+
+    dense = jax.jit(viterbi_vanilla)
+
+    band_rows = []
+    for div in (4, 8, 16):
+        w = K // div
+        band = BandConstraint(centers=centers, width=w)
+        mlp, mla, mem = constrain_inputs(band, log_pi, log_A, em)
+        banded = jax.jit(lambda lp, la, e, c=jnp.asarray(centers):
+                         viterbi_decode_banded(lp, la, e, c, width=w))
+
+        p_dense, s_dense = dense(mlp, mla, mem)
+        p_band, s_band = banded(log_pi, log_A, em)
+        bit = (bool(jnp.all(p_dense == p_band))
+               and float(s_dense) == float(s_band))
+
+        t_dense = timeit(dense, mlp, mla, mem, repeats=5)
+        t_band = timeit(banded, log_pi, log_A, em, repeats=5)
+        dense_bytes = (decoder_state_bytes("vanilla", K, T)
+                       + band.mask_bytes(K, T))
+        band_bytes = banded_state_bytes(K, T, w)
+        emit(f"fig13/band_w{w}", t_band,
+             f"dense_masked_us={t_dense * 1e6:.1f};"
+             f"speedup={t_dense / t_band:.2f}x;bit_identical={bit}")
+        band_rows.append(dict(
+            K=K, T=T, width=w, width_frac=f"K/{div}", bit_identical=bit,
+            dense_masked_s=t_dense, banded_s=t_band,
+            speedup=t_dense / t_band,
+            state_bytes_dense_masked=dense_bytes,
+            state_bytes_banded=band_bytes))
+
+    lex_rows = []
+    for n_words in (4, 16, 64):
+        lex = _lexicon(n_words)
+        mlp, mla, mem = constrain_inputs(lex, log_pi, log_A, em)
+        t_masked = timeit(dense, mlp, mla, mem, repeats=5)
+        emit(f"fig13/lexicon_{n_words}w", t_masked,
+             f"live_states={lex.live_states(K)}/{K};"
+             f"mask_bytes={lex.mask_bytes(K, T)}")
+        lex_rows.append(dict(
+            K=K, T=T, n_words=n_words, masked_s=t_masked,
+            mask_bytes=lex.mask_bytes(K, T),
+            live_states=lex.live_states(K)))
+
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(dict(backend=jax.default_backend(),
+                       interpret=jax.default_backend() != "tpu",
+                       band_rows=band_rows, lexicon_rows=lex_rows), f,
+                  indent=2)
+    emit("fig13/json_written", 0.0, OUT_JSON)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

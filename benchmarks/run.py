@@ -10,7 +10,7 @@ import argparse
 import sys
 import traceback
 
-QUICK_SUITES = ["fig10", "fig12"]
+QUICK_SUITES = ["fig10", "fig12", "fig13"]
 
 
 def main() -> None:
@@ -22,7 +22,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import (table1_overall, fig7_scaling, fig8_density, fig9_beam,
-                   fig10_kernel, fig11_streaming, fig12_batch, roofline_table)
+                   fig10_kernel, fig11_streaming, fig12_batch,
+                   fig13_constrained, roofline_table)
     suites = {
         "table1": table1_overall.run,
         "fig7": fig7_scaling.run,
@@ -31,6 +32,7 @@ def main() -> None:
         "fig10": fig10_kernel.run,
         "fig11": fig11_streaming.run,
         "fig12": fig12_batch.run,
+        "fig13": fig13_constrained.run,
         "roofline": roofline_table.run,
     }
     if args.only:

@@ -55,8 +55,10 @@ from .findings import Finding, ProveReport
 __all__ = [
     "IRStats", "JAXPR_GRID", "JAXPR_BATCH_GRID", "DEEP_GRID",
     "DEEP_BATCH_GRID", "INFLIGHT_GRID", "DEEP_INFLIGHT_GRID",
+    "CONSTRAINED_GRID", "DEEP_CONSTRAINED_GRID",
     "PV103_MODEL_FACTOR", "PV103_FLOOR_BYTES",
     "entry_jaxpr", "batch_entry_jaxpr", "inflight_entry_jaxpr",
+    "constrained_entry_jaxpr", "constrained_masked_entry_jaxpr",
     "analyze_jaxpr", "retained_bytes", "dp_state_bytes", "flop_count",
     "jaxpr_peak_temp_bytes", "jaxpr_flops", "check_jaxpr",
 ]
@@ -75,6 +77,13 @@ DEEP_BATCH_GRID: tuple[tuple[int, int, int], ...] = (
 INFLIGHT_GRID: tuple[tuple[int, int, int], ...] = ((4, 8, 16), (8, 16, 24))
 DEEP_INFLIGHT_GRID: tuple[tuple[int, int, int], ...] = (
     INFLIGHT_GRID + ((8, 16, 128),))
+#: (K, T, width) grid for the constrained entry points (PR 10): the banded
+#: sliding-window decode and the mask-fused decode; --deep adds a point where
+#: the masked trace takes the Pallas kernel path (K % 128 == 0).
+CONSTRAINED_GRID: tuple[tuple[int, int, int], ...] = ((24, 64, 3),
+                                                      (64, 256, 8))
+DEEP_CONSTRAINED_GRID: tuple[tuple[int, int, int], ...] = (
+    CONSTRAINED_GRID + ((128, 384, 8),))
 
 #: An intermediate bigger than model x factor (with an absolute floor so tiny
 #: grids don't false-positive on padding) is PV103.
@@ -387,6 +396,38 @@ def inflight_entry_jaxpr(S: int, block: int, K: int):
     )(pi, A, em0, fresh, em, delta, nfeed)
 
 
+def constrained_entry_jaxpr(K: int, T: int, width: int):
+    """Closed jaxpr of the banded sliding-window decode at (K, T, width).
+
+    This is what `FusedSpec(constraint=band)` runs when the band covers the
+    horizon — the path whose whole point is a smaller DP state, so its IR
+    gets the same PV104 formula-vs-IR treatment as the dense methods,
+    against `constraints.banded_state_bytes`.
+    """
+    from repro.kernels.ops import viterbi_decode_banded
+    pi, A, em = _abstract_hmm(K, T)
+    centers = jnp.arange(T, dtype=jnp.int32) % K
+    return jax.make_jaxpr(
+        lambda p, a, e: viterbi_decode_banded(p, a, e, centers, width=width)
+    )(pi, A, em)
+
+
+def constrained_masked_entry_jaxpr(K: int, T: int):
+    """Closed jaxpr of the mask-fused decode (penalties as traced operands).
+
+    The generic constrained fused path: a static (K, K) transition penalty
+    and a streaming (T, K) step penalty fused into the DP adds
+    (`kernels.ops.viterbi_decode_fused_masked`).
+    """
+    from repro.kernels.ops import viterbi_decode_fused_masked
+    pi, A, em = _abstract_hmm(K, T)
+    t_pen = jax.ShapeDtypeStruct((K, K), jnp.float32)
+    s_pen = jax.ShapeDtypeStruct((T, K), jnp.float32)
+    return jax.make_jaxpr(
+        lambda p, a, e, tp, sp: viterbi_decode_fused_masked(
+            p, a, e, t_pen=tp, s_pen=sp))(pi, A, em, t_pen, s_pen)
+
+
 @dataclasses.dataclass(frozen=True)
 class IRStats:
     """What one traced entry point derives from its jaxpr."""
@@ -519,4 +560,45 @@ def check_jaxpr(quick: bool = False, deep: bool = False,
             "model_bytes": stats.model_bytes,
         }
         report.checks.append(subject)
+
+    # the constrained decode entry points (PR 10): the banded sliding-window
+    # decode (PV104 against `banded_state_bytes` — the claim that a covering
+    # band shrinks DP state must hold in the IR, not just the formula) and
+    # the mask-fused decode (penalties are traced operands; the fused model
+    # plus mask bytes must cover its DP state).
+    from repro.core.constraints import banded_state_bytes
+    cgrid = (DEEP_CONSTRAINED_GRID if deep
+             else (CONSTRAINED_GRID[:1] if quick else CONSTRAINED_GRID))
+    for K, T, width in cgrid:
+        for subject, entry, model in (
+                (f"jaxpr:constrained[K={K},T={T},band={width}]",
+                 lambda: constrained_entry_jaxpr(K, T, width),
+                 banded_state_bytes(K, T, width)),
+                (f"jaxpr:constrained:masked[K={K},T={T}]",
+                 lambda: constrained_masked_entry_jaxpr(K, T),
+                 spec_state_bytes(SPEC_BY_METHOD["fused"](), K, T)
+                 + K * K * 4 + T * K * 4)):
+            try:
+                closed = entry()
+            except Exception as e:
+                report.findings.append(Finding(
+                    "PV103", subject, f"trace error {e!r}"))
+                continue
+            stats, found = analyze_jaxpr(closed, subject, model)
+            report.findings.extend(found)
+            slack = 8 * T + 256
+            if stats.dp_state_bytes > model + slack:
+                report.findings.append(Finding(
+                    "PV104", subject,
+                    f"constrained-path model {model:,}B does not cover the "
+                    f"IR's DP state {stats.dp_state_bytes:,}B "
+                    f"(+{slack:,}B slack) — the banded/masked footprint "
+                    f"claim the planner prices is wrong"))
+            report.stats[subject] = {
+                "retained_bytes": stats.retained_bytes,
+                "dp_state_bytes": stats.dp_state_bytes,
+                "flops": stats.flops,
+                "model_bytes": model,
+            }
+            report.checks.append(subject)
     return report

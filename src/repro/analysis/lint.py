@@ -37,6 +37,18 @@ Rule catalogue (see `RULES`):
          ``kernels/``; a pallas_call living anywhere else would silently
          escape that audit, so the kernel-layer boundary is enforced here.
 
+  FL007  manual ``-inf`` masking — a ``jnp.where(...)`` whose arguments
+         mention a neg-inf-like constant (``NEG_INF``, ``-jnp.inf``,
+         ``float("-inf")``, a ``-1e8``-or-larger literal) — outside
+         ``core/constraints.py`` and ``kernels/``.  Ad-hoc masks are where
+         bit-identity dies: PR 10 centralised every allowed-set mask as an
+         additive `ConstraintSpec` penalty so offline, batched, streaming
+         and kernel paths apply *the same float adds*.  A hand-rolled
+         ``where(mask, x, -inf)`` elsewhere silently forks that contract;
+         either express it as a constraint or move it into the kernel layer
+         (and if it is a genuine seam — sentinel padding, reduction
+         identities — annotate it with a reasoned disable).
+
 Suppression grammar, one or more comma-separated entries::
 
     x = float(delta[q])  # flashlint: disable=FL002(commit-point transfer)
@@ -67,6 +79,7 @@ RULES: dict[str, str] = {
     "FL004": "string-dispatch viterbi_decode outside the shim and tests",
     "FL005": "malformed flashlint disable comment",
     "FL006": "raw Pallas API outside kernels/",
+    "FL007": "manual -inf masking outside core/constraints.py and kernels/",
 }
 
 # FL001 — exact dotted names that must stay inside the compat shim.
@@ -98,6 +111,12 @@ _FL002_SYNC_CALLS = {
 }
 _STATIC_ATTRS = {"shape", "ndim", "dtype", "weak_type", "sharding"}
 _TRACED_ROOTS = {"jnp", "jax"}
+
+# FL007 — names conventionally bound to the tropical -inf sentinel, and the
+# magnitude at which a negative literal is clearly one (core.hmm.NEG_INF is
+# -1.0e9; real log-probs never reach -1e8).
+_FL007_NEG_NAMES = {"NEG_INF", "_SENTINEL", "_NEG", "_NEG_INF"}
+_FL007_MAGNITUDE = 1e8
 
 _DISABLE_ITEM = re.compile(r"(?P<code>[A-Z]{2}\d{3})\((?P<reason>[^()]*)\)")
 _DISABLE_LINE = re.compile(
@@ -141,6 +160,11 @@ def _is_dispatch_shim(path: str) -> bool:
 def _is_kernel_layer(path: str) -> bool:
     """kernels/ — the only home for raw Pallas API (FL006 scope)."""
     return "kernels" in _parts(path)[:-1]
+
+
+def _is_constraints_file(path: str) -> bool:
+    """core/constraints.py — the one blessed home for -inf penalty building."""
+    return _parts(path)[-2:] == ("core", "constraints.py")
 
 
 def _is_test_file(path: str) -> bool:
@@ -271,6 +295,33 @@ def _mentions_traced(node: ast.AST) -> bool:
     return False
 
 
+def _mentions_neg_inf(node: ast.AST) -> bool:
+    """Does this expression contain a neg-inf-like constant anywhere?
+
+    Matches the conventional sentinel names (`NEG_INF`, `_SENTINEL`, ...),
+    ``.inf`` attributes (``jnp.inf`` / ``np.inf`` / ``math.inf``, usually
+    under a unary minus), ``float("-inf")``, and negated numeric literals of
+    ``-1e8`` magnitude or larger — recursing through arithmetic so scaled
+    sentinels like ``4.0 * NEG_INF`` still register.
+    """
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in _FL007_NEG_NAMES:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr == "inf":
+            return True
+        if (isinstance(sub, ast.UnaryOp) and isinstance(sub.op, ast.USub)
+                and isinstance(sub.operand, ast.Constant)
+                and isinstance(sub.operand.value, (int, float))
+                and abs(sub.operand.value) >= _FL007_MAGNITUDE):
+            return True
+        if (isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name)
+                and sub.func.id == "float" and len(sub.args) == 1
+                and isinstance(sub.args[0], ast.Constant)
+                and sub.args[0].value == "-inf"):
+            return True
+    return False
+
+
 # ---------------------------------------------------------------------------
 # The visitor
 # ---------------------------------------------------------------------------
@@ -283,6 +334,9 @@ class _Visitor(ast.NodeVisitor):
         self.check_fl004 = not (_is_dispatch_shim(path)
                                 or _is_test_file(path))
         self.check_fl006 = not (_is_kernel_layer(path) or _is_test_file(path))
+        self.check_fl007 = not (_is_constraints_file(path)
+                                or _is_kernel_layer(path)
+                                or _is_test_file(path))
         self.found: list[Violation] = []
 
     def _flag(self, node: ast.AST, code: str, message: str) -> None:
@@ -378,6 +432,16 @@ class _Visitor(ast.NodeVisitor):
                 self._flag(node, "FL004",
                            f"legacy {name}(method=...) dispatch; construct "
                            f"a typed DecodeSpec / ViterbiDecoder")
+        if self.check_fl007 and isinstance(func, ast.Attribute):
+            dotted = _dotted(func)
+            if (dotted in ("jnp.where", "jax.numpy.where", "np.where",
+                           "numpy.where")
+                    and any(_mentions_neg_inf(a) for a in node.args)):
+                self._flag(node, "FL007",
+                           "manual -inf masking via where(); express the "
+                           "allowed set as a core.constraints penalty (or "
+                           "move it into kernels/) so every decode path "
+                           "applies identical masking adds")
         self.generic_visit(node)
 
 

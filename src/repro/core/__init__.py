@@ -12,6 +12,11 @@ from .beam_static import beam_static_viterbi, beam_static_mp_viterbi
 from .assoc import viterbi_assoc
 from .online import (OnlineViterbiDecoder, OnlineBeamDecoder,
                      SlotViterbiDecoder, viterbi_online, viterbi_online_beam)
+from .constraints import (ConstraintSpec, TransitionMaskConstraint,
+                          BandConstraint, LexiconConstraint,
+                          ScheduleConstraint, constrain_inputs,
+                          compiled_penalties, with_constraint,
+                          banded_state_bytes)
 from .spec import (ResourceBudget, DecodeSpec, VanillaSpec, CheckpointSpec,
                    FlashSpec, FlashBSSpec, BeamStaticSpec, BeamStaticMPSpec,
                    AssocSpec, FusedSpec, OnlineSpec, OnlineBeamSpec,
@@ -32,6 +37,10 @@ __all__ = [
     "flash_bs_viterbi", "beam_static_viterbi", "beam_static_mp_viterbi",
     "viterbi_assoc", "OnlineViterbiDecoder", "OnlineBeamDecoder",
     "SlotViterbiDecoder", "viterbi_online", "viterbi_online_beam",
+    # constrained decoding
+    "ConstraintSpec", "TransitionMaskConstraint", "BandConstraint",
+    "LexiconConstraint", "ScheduleConstraint", "constrain_inputs",
+    "compiled_penalties", "with_constraint", "banded_state_bytes",
     # typed spec / planner / decoder API
     "ResourceBudget", "DecodeSpec", "VanillaSpec", "CheckpointSpec",
     "FlashSpec", "FlashBSSpec", "BeamStaticSpec", "BeamStaticMPSpec",

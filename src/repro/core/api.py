@@ -62,6 +62,7 @@ def viterbi_decode(
     stream_chunk: int = _UNSET,
     max_lag: int | None = _UNSET,
     bt: int = _UNSET,
+    constraint: Any = _UNSET,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode the max-likelihood state path of (T, K) emissions.
 
@@ -69,7 +70,17 @@ def viterbi_decode(
     result is bit-identical to `ViterbiDecoder(spec, log_pi, log_A).decode`.
     Returns (path (T,) int32, score).  Tunables the method does not consume
     raise a DeprecationWarning (they used to be silently ignored).
+
+    Constrained decoding is typed-API only: `constraint=` here raises
+    `TypeError` rather than joining the warn-and-ignore policy — dropping a
+    constraint silently would return paths the caller asked to forbid.
     """
+    if constraint is not _UNSET:
+        raise TypeError(
+            "viterbi_decode() does not take constraint=; build a typed spec "
+            "(e.g. FusedSpec(constraint=...)) and use ViterbiDecoder or "
+            "spec.run — the legacy shim will not risk silently decoding "
+            "unconstrained")
     passed = {name: value for name, value in (
         ("parallelism", parallelism), ("lanes", lanes),
         ("beam_width", beam_width), ("chunk", chunk), ("seg_len", seg_len),

@@ -118,6 +118,7 @@ def viterbi_decode_batch(
     bt: int = 8,
     mesh=None,
     data_axis: str = "data",
+    constraint=None,
 ) -> tuple[jax.Array, jax.Array]:
     """Decode a (possibly ragged) batch of emission sequences.
 
@@ -141,6 +142,13 @@ def viterbi_decode_batch(
         same per-sequence compute — results stay bit-identical to the
         single-device call.  The HMM tensors are replicated.
       data_axis: mesh axis name the batch shards over.
+      constraint: optional `core.constraints.ConstraintSpec`, shared by the
+        whole bucket (per-step schedules index *absolute* step t, so ragged
+        tails just never reach the later rows).  The local fused method keeps
+        the inputs dense and fuses the penalty adds into the kernel; every
+        other path (and the sharded one) pre-masks the inputs with
+        `constrain_inputs` — both are bit-identical to decoding the
+        pre-masked model.
 
     Returns:
       (paths (B, T) int32, scores (B,)): paths[i, :lengths[i]] is the decode
@@ -155,6 +163,17 @@ def viterbi_decode_batch(
         lengths = jnp.full((B,), T, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
     _validate_lengths(lengths, T)
+
+    if constraint is not None:
+        from .constraints import compiled_penalties, constrain_inputs
+        if method == "fused" and mesh is None and T > 1:
+            from repro.kernels.ops import viterbi_decode_fused_batch_masked
+            t_pen, pi_pen, s_pen = compiled_penalties(constraint, K, T)
+            return viterbi_decode_fused_batch_masked(
+                log_pi, log_A, emissions, lengths,
+                t_pen=t_pen, pi_pen=pi_pen, s_pen=s_pen, bt=bt)
+        log_pi, log_A, emissions = constrain_inputs(
+            constraint, log_pi, log_A, emissions)
 
     if T == 1:
         d0 = log_pi[None, :] + emissions[:, 0, :]

@@ -44,6 +44,7 @@ def _run_spec_batch(spec: DecodeSpec, em, log_pi, log_A, lengths):
     from .batch import viterbi_decode_batch
     return viterbi_decode_batch(em, log_pi, log_A, lengths,
                                 method=spec.batch_method,
+                                constraint=spec.constraint,
                                 **spec.batch_tunables())
 
 
@@ -135,7 +136,8 @@ class ViterbiDecoder:
                 [lengths, jnp.ones((pad_b,), jnp.int32)])
         paths, scores = viterbi_decode_batch(
             emissions, self.log_pi, self.log_A, lengths, method=method,
-            mesh=mesh, data_axis=data_axis, **self.spec.batch_tunables())
+            mesh=mesh, data_axis=data_axis, constraint=self.spec.constraint,
+            **self.spec.batch_tunables())
         return paths[:B], scores[:B]
 
     # -- streaming ----------------------------------------------------------

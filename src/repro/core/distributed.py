@@ -159,6 +159,7 @@ def _tp_segment_decode(log_pi, log_A_local, em_seg, pad_seg, entry, exit_state,
         # pruned re-init needs row log_A[entry]: only one shard owns it -> pmax
         local_has = (entry >= row0) & (entry < row0 + kl)
         local_row = log_A_local[jnp.clip(entry - row0, 0, kl - 1)]
+        # flashlint: disable=FL007(pmax reduction identity for the non-owning shards, not an allowed-set mask)
         row = jax.lax.pmax(jnp.where(local_has, local_row, NEG_INF * 2), axis)
         delta0 = jnp.where(is_first, log_pi + em_seg[0], row + em_seg[0])
     mid0 = jnp.zeros((K,), dtype=jnp.int32)

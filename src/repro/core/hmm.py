@@ -87,6 +87,7 @@ def erdos_renyi_hmm(
     weights = jnp.where(mask, raw, 0.0)
     row_sum = jnp.sum(weights, axis=1, keepdims=True)
     probs = weights / row_sum
+    # flashlint: disable=FL007(model generator defining log_A itself; this IS the dense input constraints mask against)
     log_A = jnp.where(mask, jnp.log(jnp.maximum(probs, 1e-30)), NEG_INF)
 
     pi = jax.random.dirichlet(k_pi, jnp.ones((num_states,)) * 0.8)
@@ -114,6 +115,7 @@ def left_to_right_hmm(
     weights = jnp.where(allowed, base * noise, 0.0)
     # last rows renormalise over remaining allowed targets
     probs = weights / jnp.maximum(jnp.sum(weights, axis=1, keepdims=True), 1e-30)
+    # flashlint: disable=FL007(model generator defining the left-to-right log_A, not a decode-time mask)
     log_A = jnp.where(allowed, jnp.log(jnp.maximum(probs, 1e-30)), NEG_INF)
     log_pi = jnp.full((num_states,), NEG_INF).at[0].set(0.0)
     emit = jax.random.dirichlet(k_emit, jnp.ones((num_obs,)) * 0.5, (num_states,))

@@ -265,12 +265,24 @@ class OnlineViterbiDecoder(_ExactWindow):
     """
 
     def __init__(self, log_pi, log_A, *, max_lag: int | None = None,
-                 bt: int = 8):
+                 bt: int = 8, constraint=None):
         super().__init__(max_lag)
         self.log_pi = jnp.asarray(log_pi)
         self.log_A = jnp.asarray(log_A)
         self.K = int(self.log_A.shape[0])
         self.bt = bt
+        self.constraint = constraint
+        if constraint is not None:
+            # static components mask the model once; the per-step schedule is
+            # added chunk-by-chunk in `feed` (same elementwise adds as the
+            # offline `constrain_inputs`, so streaming stays bit-identical)
+            from .constraints import init_penalty, transition_penalty
+            pi_pen = init_penalty(constraint, self.K)
+            t_pen = transition_penalty(constraint, self.K)
+            if pi_pen is not None:
+                self.log_pi = self.log_pi + jnp.asarray(pi_pen)
+            if t_pen is not None:
+                self.log_A = self.log_A + jnp.asarray(t_pen)
         self._delta: jax.Array | None = None
 
     # -- window plumbing ----------------------------------------------------
@@ -282,6 +294,7 @@ class OnlineViterbiDecoder(_ExactWindow):
 
     def _mask_inconsistent(self, f_state: int) -> None:
         keep = jnp.asarray(self._ancestor_keep(f_state))
+        # flashlint: disable=FL007(forced-commit suppression seam; accumulative add by design, not an allowed-set mask)
         self._delta = jnp.where(keep, self._delta, self._delta + 4.0 * NEG_INF)
 
     # -- feeding ------------------------------------------------------------
@@ -292,6 +305,12 @@ class OnlineViterbiDecoder(_ExactWindow):
         self._check_open(em_chunk)
         if em_chunk.shape[0] == 0:
             return np.zeros((0,), np.int32)
+        if self.constraint is not None:
+            from .constraints import step_penalty_rows
+            rows = step_penalty_rows(self.constraint, self.K, self._t,
+                                     int(em_chunk.shape[0]))
+            if rows is not None:
+                em_chunk = em_chunk + jnp.asarray(rows)
         if self._delta is None:
             self._delta = self.log_pi + em_chunk[0]
             self._t = 1
@@ -442,13 +461,27 @@ class OnlineBeamDecoder(_StreamingDecoder):
     """
 
     def __init__(self, log_pi, log_A, *, beam_width: int = 128,
-                 kchunk: int = 128, max_lag: int | None = None):
+                 kchunk: int = 128, max_lag: int | None = None,
+                 constraint=None):
         super().__init__(max_lag)
         log_pi = jnp.asarray(log_pi)
         log_A = jnp.asarray(log_A)
         K = int(log_A.shape[0])
         self.K = K
         self.B = int(min(beam_width, K))
+        self.constraint = constraint
+        if constraint is not None:
+            # mask before the sentinel padding below: the intersection of the
+            # beam with the allowed set falls out of the top-B itself —
+            # disallowed states score ~NEG_INF and lose every slot, so the
+            # constraint compounds with the beam pruning for free
+            from .constraints import init_penalty, transition_penalty
+            pi_pen = init_penalty(constraint, K)
+            t_pen = transition_penalty(constraint, K)
+            if pi_pen is not None:
+                log_pi = log_pi + jnp.asarray(pi_pen)
+            if t_pen is not None:
+                log_A = log_A + jnp.asarray(t_pen)
         kchunk = int(min(kchunk, K))
         # pad K to a kchunk multiple; fake states get sentinel scores so they
         # never displace real candidates (same scheme as flash_bs_viterbi)
@@ -492,6 +525,7 @@ class OnlineBeamDecoder(_StreamingDecoder):
         for i in range(len(rows) - 1, -1, -1):
             anc = rows[i][anc]
         keep = jnp.asarray(self._sstates[0][anc] == f_state)
+        # flashlint: disable=FL007(beam forced-commit suppression seam, same accumulative add as the dense decoder)
         self._scores = jnp.where(keep, self._scores,
                                  self._scores + 4.0 * NEG_INF)
 
@@ -502,6 +536,12 @@ class OnlineBeamDecoder(_StreamingDecoder):
         self._check_open(em_chunk)
         if em_chunk.shape[0] == 0:
             return np.zeros((0,), np.int32)
+        if self.constraint is not None and em_chunk.shape[1] == self.K:
+            from .constraints import step_penalty_rows
+            rows = step_penalty_rows(self.constraint, self.K, self._t,
+                                     int(em_chunk.shape[0]))
+            if rows is not None:
+                em_chunk = em_chunk + jnp.asarray(rows)
         if self.K_pad != self.K and em_chunk.shape[1] == self.K:
             em_chunk = jnp.pad(em_chunk, ((0, 0), (0, self.K_pad - self.K)),
                                constant_values=_SENTINEL / 2)

@@ -24,7 +24,8 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from .spec import DecodeSpec, FlashSpec, FlashBSSpec, ResourceBudget
+from .constraints import ConstraintSpec, banded_state_bytes
+from .spec import DecodeSpec, FlashSpec, FlashBSSpec, FusedSpec, ResourceBudget
 
 __all__ = ["decoder_state_bytes", "spec_state_bytes", "DecodePlan", "plan",
            "IR_STATE_FACTOR", "crosscheck_state_bytes",
@@ -69,10 +70,24 @@ def decoder_state_bytes(method: str, K: int, T: int, P: int = 8,
 
 
 def spec_state_bytes(spec: DecodeSpec, K: int, T: int) -> int:
-    """Cost-model bytes for a typed spec (the planner's fitness function)."""
+    """Cost-model bytes for a typed spec (the planner's fitness function).
+
+    A constrained spec pays for its compiled penalty masks on top of the
+    method's DP state — except the banded fused path, which never
+    materialises K-wide rows and is costed by `banded_state_bytes` (this is
+    how a tight `BandConstraint` keeps exact decoding on the ladder at
+    budgets where the dense methods have long since degraded to beams).
+    """
     P = getattr(spec, "parallelism", 1)
     B = getattr(spec, "beam_width", 128)
-    return decoder_state_bytes(spec.method, K, T, P=P, B=B)
+    base = decoder_state_bytes(spec.method, K, T, P=P, B=B)
+    c = spec.constraint
+    if c is None:
+        return base
+    band = c.band()
+    if spec.method == "fused" and band is not None and len(band[0]) >= T:
+        return banded_state_bytes(K, T, band[1])
+    return base + c.mask_bytes(K, T)
 
 
 #: PV104 headroom per method: how far the jaxpr-derived DP-state bytes
@@ -253,7 +268,8 @@ _FLOOR = FlashBSSpec(parallelism=1, beam_width=16)
 
 def plan(K: int, T: int,
          budget: ResourceBudget | int | None = None,
-         batch: int | None = None) -> DecodePlan:
+         batch: int | None = None,
+         constraint: ConstraintSpec | None = None) -> DecodePlan:
     """Pick the best-fitting decoder spec for a (K, T) workload.
 
     Args:
@@ -263,6 +279,12 @@ def plan(K: int, T: int,
       batch: optional number of sequences decoded together; the footprint is
         per-sequence bytes x batch, and the chosen spec is guaranteed to be a
         `viterbi_decode_batch` method.
+      constraint: optional `ConstraintSpec` the workload decodes under.
+        Every rung carries it (its mask bytes count against the budget), and
+        a `BandConstraint` covering the horizon adds an exact banded-fused
+        rung between the exact and beam rungs — so a tight constraint keeps
+        exact decoding alive at budgets where the dense ladder has already
+        degraded to beams.
 
     Returns a `DecodePlan`; `.spec` is ready for `ViterbiDecoder` and
     `.why` says which ladder rung fired and what it cost.
@@ -292,15 +314,26 @@ def plan(K: int, T: int,
     exact_ps = (_EXACT_P if budget.latency_hint != "memory"
                 else tuple(reversed(_EXACT_P)))
     for P in exact_ps:
-        spec = FlashSpec(parallelism=P)
+        spec = FlashSpec(parallelism=P, constraint=constraint)
         bytes_ = fits(spec)
         if bytes_ is not None:
             return mk(spec, f"exact, P={P}", bytes_)
+    # still exact, far smaller state: the banded fused path (single-sequence
+    # only — the batched fused kernel applies the band as fused penalty adds
+    # instead, whose footprint the rungs above already modeled).
+    band = constraint.band() if constraint is not None else None
+    if band is not None and len(band[0]) >= T and batch is None:
+        spec = FusedSpec(constraint=constraint)
+        bytes_ = fits(spec)
+        if bytes_ is not None:
+            return mk(spec, f"exact banded fused, width={band[1]}", bytes_)
     for B in _BEAM_B:
         for P in _BEAM_P:
-            spec = FlashBSSpec(parallelism=P, beam_width=B)
+            spec = FlashBSSpec(parallelism=P, beam_width=B,
+                               constraint=constraint)
             bytes_ = fits(spec)
             if bytes_ is not None:
                 return mk(spec, f"beam, P={P}, B={B}", bytes_)
-    return mk(_FLOOR, "floor: P=1,B=16",
-              spec_state_bytes(_FLOOR, K, T) * scale)
+    floor = dataclasses.replace(_FLOOR, constraint=constraint)
+    return mk(floor, "floor: P=1,B=16",
+              spec_state_bytes(floor, K, T) * scale)

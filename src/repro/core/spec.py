@@ -24,7 +24,9 @@ several specs fit.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, ClassVar, Mapping
+from typing import Any, ClassVar, Mapping, Optional
+
+from .constraints import ConstraintSpec, constrain_inputs
 
 __all__ = [
     "ResourceBudget", "DecodeSpec",
@@ -91,13 +93,27 @@ class DecodeSpec:
       legacy_tunables — legacy `viterbi_decode` kwarg name -> field name map;
                         anything *not* listed here is ignored-with-a-warning
                         by the back-compat shim and rejected by the spec.
+
+    Every spec additionally carries an optional `constraint`
+    (`core.constraints.ConstraintSpec`): a frozen, hashable description of
+    which states/transitions are legal.  `run` applies it by masking the
+    inputs with tropical-identity adds (`constrain_inputs`), so a constrained
+    decode is bit-identical to the same method over the pre-masked model;
+    specs with a fused kernel path override `_run_constrained` to apply the
+    same adds inside the kernel instead of materialising masked inputs.
     """
     method: ClassVar[str] = ""
     batch_method: ClassVar[str | None] = None
     jittable: ClassVar[bool] = True
     legacy_tunables: ClassVar[Mapping[str, str]] = {}
+    constraint: Optional[ConstraintSpec] = dataclasses.field(
+        default=None, kw_only=True)
 
     def __post_init__(self):
+        if self.constraint is not None and \
+                not isinstance(self.constraint, ConstraintSpec):
+            raise TypeError(f"constraint must be a ConstraintSpec or None, "
+                            f"got {type(self.constraint).__name__}")
         self.validate()
 
     def validate(self) -> None:
@@ -105,7 +121,19 @@ class DecodeSpec:
 
     def run(self, log_pi, log_A, emissions):
         """Decode one (T, K) sequence; returns (path (T,) int32, score)."""
+        if self.constraint is None:
+            return self._run(log_pi, log_A, emissions)
+        return self._run_constrained(log_pi, log_A, emissions,
+                                     self.constraint)
+
+    def _run(self, log_pi, log_A, emissions):
+        """The unconstrained decode; what subclasses implement."""
         raise NotImplementedError
+
+    def _run_constrained(self, log_pi, log_A, emissions, constraint):
+        """Constrained decode; default = the method over pre-masked inputs."""
+        return self._run(*constrain_inputs(constraint, log_pi, log_A,
+                                           emissions))
 
     def batch_tunables(self) -> dict[str, Any]:
         """Tunables forwarded to `viterbi_decode_batch` (batchable specs)."""
@@ -118,7 +146,7 @@ class VanillaSpec(DecodeSpec):
     method: ClassVar[str] = "vanilla"
     batch_method: ClassVar[str | None] = "vanilla"
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .vanilla import viterbi_vanilla
         return viterbi_vanilla(log_pi, log_A, emissions)
 
@@ -133,7 +161,7 @@ class CheckpointSpec(DecodeSpec):
     def validate(self):
         _check_opt_pos(self.seg_len, "seg_len")
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .checkpoint_viterbi import viterbi_checkpoint
         return viterbi_checkpoint(log_pi, log_A, emissions,
                                   seg_len=self.seg_len)
@@ -153,7 +181,7 @@ class FlashSpec(DecodeSpec):
         _check_pos(self.parallelism, "parallelism")
         _check_lanes(self.lanes)
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .flash import flash_viterbi
         return flash_viterbi(log_pi, log_A, emissions,
                              parallelism=self.parallelism, lanes=self.lanes)
@@ -181,7 +209,7 @@ class FlashBSSpec(DecodeSpec):
         _check_lanes(self.lanes)
         _check_pos(self.chunk, "chunk")
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .flash_bs import flash_bs_viterbi
         return flash_bs_viterbi(log_pi, log_A, emissions,
                                 beam_width=self.beam_width,
@@ -204,7 +232,7 @@ class BeamStaticSpec(DecodeSpec):
     def validate(self):
         _check_pos(self.beam_width, "beam_width")
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .beam_static import beam_static_viterbi
         return beam_static_viterbi(log_pi, log_A, emissions,
                                    B=min(self.beam_width,
@@ -227,7 +255,7 @@ class BeamStaticMPSpec(DecodeSpec):
         _check_pos(self.parallelism, "parallelism")
         _check_lanes(self.lanes)
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .beam_static import beam_static_mp_viterbi
         return beam_static_mp_viterbi(log_pi, log_A, emissions,
                                       beam_width=self.beam_width,
@@ -240,7 +268,7 @@ class AssocSpec(DecodeSpec):
     """Tropical associative scan — O(log T) depth, O(K^3 T) work."""
     method: ClassVar[str] = "assoc"
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .assoc import viterbi_assoc
         return viterbi_assoc(log_pi, log_A, emissions)
 
@@ -260,9 +288,31 @@ class FusedSpec(DecodeSpec):
     def validate(self):
         _check_pos(self.bt, "bt")
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from repro.kernels.ops import viterbi_decode_fused
         return viterbi_decode_fused(log_pi, log_A, emissions)
+
+    def _run_constrained(self, log_pi, log_A, emissions, constraint):
+        # The fused path applies constraints *inside* the kernel: a
+        # BandConstraint that covers the horizon decodes over sliding
+        # windows (never materialising K-wide rows), anything else fuses the
+        # penalty adds into the DP step.  Both reproduce the masked-input
+        # adds operand-for-operand, so results stay bit-identical to the
+        # generic path.
+        from .constraints import compiled_penalties
+        from repro.kernels.ops import (viterbi_decode_banded,
+                                       viterbi_decode_fused_masked)
+        T = emissions.shape[0]
+        band = constraint.band()
+        if band is not None and len(band[0]) >= T:
+            centers, width = band
+            return viterbi_decode_banded(log_pi, log_A, emissions,
+                                         centers[:T], width=width)
+        K = log_A.shape[-1]
+        t_pen, pi_pen, s_pen = compiled_penalties(constraint, K, T)
+        return viterbi_decode_fused_masked(log_pi, log_A, emissions,
+                                           t_pen=t_pen, pi_pen=pi_pen,
+                                           s_pen=s_pen)
 
     def batch_tunables(self):
         return {"bt": self.bt}
@@ -287,7 +337,7 @@ class OnlineSpec(DecodeSpec):
         _check_pos(self.stream_chunk, "stream_chunk")
         _check_opt_pos(self.max_lag, "max_lag")
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .online import viterbi_online
         return viterbi_online(log_pi, log_A, emissions,
                               chunk_size=self.stream_chunk,
@@ -296,7 +346,8 @@ class OnlineSpec(DecodeSpec):
     def make_streaming(self, log_pi, log_A):
         """The stateful incremental decoder `serving.stream` wraps."""
         from .online import OnlineViterbiDecoder
-        return OnlineViterbiDecoder(log_pi, log_A, max_lag=self.max_lag)
+        return OnlineViterbiDecoder(log_pi, log_A, max_lag=self.max_lag,
+                                    constraint=self.constraint)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -318,7 +369,7 @@ class OnlineBeamSpec(DecodeSpec):
         _check_pos(self.stream_chunk, "stream_chunk")
         _check_opt_pos(self.max_lag, "max_lag")
 
-    def run(self, log_pi, log_A, emissions):
+    def _run(self, log_pi, log_A, emissions):
         from .online import viterbi_online_beam
         return viterbi_online_beam(log_pi, log_A, emissions,
                                    beam_width=self.beam_width,
@@ -329,7 +380,8 @@ class OnlineBeamSpec(DecodeSpec):
     def make_streaming(self, log_pi, log_A):
         from .online import OnlineBeamDecoder
         return OnlineBeamDecoder(log_pi, log_A, beam_width=self.beam_width,
-                                 kchunk=self.kchunk, max_lag=self.max_lag)
+                                 kchunk=self.kchunk, max_lag=self.max_lag,
+                                 constraint=self.constraint)
 
 
 SPEC_BY_METHOD: dict[str, type[DecodeSpec]] = {
@@ -348,6 +400,14 @@ def spec_from_tunables(method: str, tunables: dict[str, Any],
     consume — the back-compat `viterbi_decode` shim turns those into a
     DeprecationWarning instead of the old silent drop.
     """
+    if "constraint" in tunables:
+        # never let the legacy shim silently decode unconstrained: the old
+        # dispatch's ignore-with-a-warning policy would be a correctness bug
+        # here, not a deprecation nit.
+        raise TypeError(
+            "constraint= is not a legacy tunable; construct a typed spec "
+            "instead, e.g. FusedSpec(constraint=...) or "
+            "with_constraint(spec, constraint)")
     try:
         cls = SPEC_BY_METHOD[method]
     except KeyError:

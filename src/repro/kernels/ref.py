@@ -49,6 +49,25 @@ def viterbi_forward_masked_ref(log_A: jax.Array, em: jax.Array,
     return psis, delta_T
 
 
+def viterbi_forward_masked_pen_ref(log_A: jax.Array, em: jax.Array,
+                                   delta0: jax.Array, pad: jax.Array,
+                                   tmask: jax.Array | None = None,
+                                   smask: jax.Array | None = None):
+    """Reference for `viterbi_dp.viterbi_forward_batch_masked` (one sequence).
+
+    The constraint penalties are *additive* ({0, NEG_INF} f32, see
+    `core.constraints`), so the reference is exactly the pad-masked recursion
+    over the pre-masked inputs — elementwise adds here and per-row adds in
+    the kernel produce identical bits, which is what makes the masked kernel
+    interchangeable with `constrain_inputs` + the dense path.
+    """
+    if tmask is not None:
+        log_A = log_A + tmask
+    if smask is not None:
+        em = em + smask
+    return viterbi_forward_masked_ref(log_A, em, delta0, pad)
+
+
 def beam_step_ref(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
                   states: jax.Array):
     """Reference for kernels.beam_stream.beam_step.
@@ -65,4 +84,5 @@ def beam_step_ref(log_A: jax.Array, em_t: jax.Array, scores: jax.Array,
 
 
 __all__ = ["tropical_matmul_ref", "viterbi_forward_ref",
-           "viterbi_forward_masked_ref", "beam_step_ref"]
+           "viterbi_forward_masked_ref", "viterbi_forward_masked_pen_ref",
+           "beam_step_ref"]

@@ -117,6 +117,122 @@ def viterbi_forward_batch(log_A: jax.Array, em: jax.Array, delta0: jax.Array,
     )(log_A, em, pad, delta0)
 
 
+def _viterbi_fwd_masked_kernel(*refs, bt: int, nsteps: int, has_tmask: bool,
+                               has_smask: bool):
+    """Constraint-masked variant of `_viterbi_fwd_kernel`.
+
+    The masks arrive as additive f32 penalties ({0, NEG_INF}, see
+    `core.constraints`): the static transition penalty rides VMEM-resident
+    next to `log_A` and is added once per grid step, the per-step state
+    penalty streams in (bt, K) blocks alongside the emissions (shared across
+    the batch — one schedule per constraint).  Both adds reproduce the
+    reference `log_A + t_pen` / `em + s_pen` elementwise adds exactly, so
+    the masked kernel is bit-identical to decoding pre-masked inputs.
+    """
+    it = iter(refs)
+    a_ref = next(it)
+    tm_ref = next(it) if has_tmask else None
+    em_ref = next(it)
+    sm_ref = next(it) if has_smask else None
+    pad_ref = next(it)
+    d0_ref = next(it)
+    psi_ref = next(it)
+    dT_ref = next(it)
+    dscr = next(it)
+
+    ti = pl.program_id(1)
+
+    @pl.when(ti == 0)
+    def _seed():
+        dscr[0, :] = d0_ref[0, :]
+
+    log_a = a_ref[...]
+    if has_tmask:
+        log_a = log_a + tm_ref[...]
+    K = log_a.shape[0]
+    eye = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)[0]
+
+    def body(s, delta):
+        scores = delta[:, None] + log_a
+        psi = jnp.argmax(scores, axis=0).astype(jnp.int32)
+        em_t = em_ref[0, s, :]
+        if has_smask:
+            em_t = em_t + sm_ref[s, :]
+        new = jnp.max(scores, axis=0) + em_t
+        is_pad = pad_ref[0, s] > 0.5
+        psi_ref[0, s, :] = jnp.where(is_pad, eye, psi)
+        return jnp.where(is_pad, delta, new)
+
+    delta = jax.lax.fori_loop(0, bt, body, dscr[0, :])
+    dscr[0, :] = delta
+
+    @pl.when(ti == nsteps - 1)
+    def _emit():
+        dT_ref[0, :] = delta
+
+
+@functools.partial(jax.jit, static_argnames=("bt", "interpret"))
+def viterbi_forward_batch_masked(log_A: jax.Array, em: jax.Array,
+                                 delta0: jax.Array,
+                                 pad: jax.Array | None = None,
+                                 tmask: jax.Array | None = None,
+                                 smask: jax.Array | None = None, *,
+                                 bt: int = 8, interpret: bool = False):
+    """Batched fused forward pass with fused constraint penalties.
+
+    Args:
+      log_A, em, delta0, pad: as in `viterbi_forward_batch`.
+      tmask: optional (K, K) f32 additive transition penalty (VMEM-resident).
+      smask: optional (T, K) f32 additive per-step state penalty, shared
+             across the batch, streamed in (bt, K) blocks with the emissions.
+             Row t masks em[:, t] (the caller aligns step offsets).
+
+    Returns:
+      (psi, delta_T): (B, T, K) int32 backpointers and final (B, K) states.
+    """
+    B, T, K = em.shape
+    assert T % bt == 0, (T, bt)
+    nsteps = T // bt
+    if pad is None:
+        pad = jnp.zeros((B, T), em.dtype)
+    pad = pad.astype(em.dtype)
+    has_tmask = tmask is not None
+    has_smask = smask is not None
+
+    inputs = [log_A]
+    in_specs = [pl.BlockSpec((K, K), lambda b, ti: (0, 0))]
+    if has_tmask:
+        inputs.append(tmask)
+        in_specs.append(pl.BlockSpec((K, K), lambda b, ti: (0, 0)))
+    inputs.append(em)
+    in_specs.append(pl.BlockSpec((1, bt, K), lambda b, ti: (b, ti, 0)))
+    if has_smask:
+        inputs.append(smask)
+        in_specs.append(pl.BlockSpec((bt, K), lambda b, ti: (ti, 0)))
+    inputs += [pad, delta0]
+    in_specs += [pl.BlockSpec((1, bt), lambda b, ti: (b, ti)),
+                 pl.BlockSpec((1, K), lambda b, ti: (b, 0))]
+
+    return pl.pallas_call(
+        functools.partial(_viterbi_fwd_masked_kernel, bt=bt, nsteps=nsteps,
+                          has_tmask=has_tmask, has_smask=has_smask),
+        grid=(B, nsteps),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((1, bt, K), lambda b, ti: (b, ti, 0)),
+            pl.BlockSpec((1, K), lambda b, ti: (b, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, T, K), jnp.int32),
+            jax.ShapeDtypeStruct((B, K), em.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((1, K), em.dtype)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(*inputs)
+
+
 @functools.partial(jax.jit, static_argnames=("bt", "interpret"))
 def viterbi_forward(log_A: jax.Array, em: jax.Array, delta0: jax.Array,
                     pad: jax.Array | None = None, *,
@@ -145,6 +261,11 @@ FLASHPROVE_WAIVERS = {
         "default bt=8) next to the (bt, K) emission block; its lane padding "
         "costs one tile of bandwidth per grid step, immaterial against the "
         "bt x K emission stream it rides with"),
+    "PV201:pallas:viterbi_dp.viterbi_forward_batch_masked": (
+        "same (1, bt) pad-mask block as viterbi_forward_batch (32 B at the "
+        "default bt=8 against the bt x K emission + penalty streams); the "
+        "penalty blocks themselves are lane-aligned (K multiple of 128)"),
 }
 
-__all__ = ["viterbi_forward", "viterbi_forward_batch"]
+__all__ = ["viterbi_forward", "viterbi_forward_batch",
+           "viterbi_forward_batch_masked"]

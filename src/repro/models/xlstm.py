@@ -78,6 +78,7 @@ def mlstm_parallel(q, k, v, log_i, log_f):
     lm = cf[:, :, None, :] - cf[:, None, :, :]            # (B, T, S, H) t>=s
     lg = lm + log_i[:, None, :, :]                        # + log i_s
     tri = jnp.tril(jnp.ones((S, S), bool))
+    # flashlint: disable=FL007(causal attention mask in the encoder, not a decode allowed-set)
     lg = jnp.where(tri[None, :, :, None], lg, -jnp.inf)
     m = jnp.maximum(jnp.max(lg, axis=2, keepdims=True), _M_FLOOR)
     dmat = jnp.exp(lg - m)                                # (B, T, S, H)
@@ -106,6 +107,7 @@ def mlstm_chunked(q, k, v, log_i, log_f, chunk: int = 256):
         lg = lm + log_i[:, None, :, :]
         tpos = t0 + jnp.arange(chunk)
         mask = tpos[:, None] >= jnp.arange(S)[None, :]
+        # flashlint: disable=FL007(chunked causal attention mask in the encoder, not a decode allowed-set)
         lg = jnp.where(mask[None, :, :, None], lg, -jnp.inf)
         m = jnp.maximum(jnp.max(lg, axis=2, keepdims=True), _M_FLOOR)
         dmat = jnp.exp(lg - m)

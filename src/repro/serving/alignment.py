@@ -18,7 +18,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import ViterbiDecoder, as_decode_spec, spec_from_tunables
+from repro.core import (ViterbiDecoder, as_decode_spec, spec_from_tunables,
+                        LexiconConstraint, with_constraint)
 from repro.core.hmm import HMM
 
 
@@ -73,6 +74,35 @@ def make_alignment_head(hmm_log_pi, hmm_log_A, cfg, *,
     return align
 
 
+def make_lexicon_align_head(hmm_log_pi, hmm_log_A, words, *, cfg=None,
+                            self_loops: bool = True, loop_words: bool = True,
+                            mesh=None, data_axis: str = "data"):
+    """Lexicon-constrained forced alignment: only lexicon arcs survive.
+
+    `words` is the `LexiconConstraint` vocabulary — a sequence of words, each
+    a sequence of pronunciation alternatives, each a state sequence (e.g.
+    ``[((0, 1, 2), (0, 3, 2)), ((4, 5),)]``).  The constraint compiles the
+    trie's arc set into additive {0, NEG_INF} penalties that every decode
+    path fuses into its DP adds, so results are bit-identical to decoding
+    the `constrain_inputs`-masked HMM densely — but the planner can also
+    price the shrunken live-state set (`constraint.live_states`).
+
+    `cfg` is a `DecodeSpec` or legacy `AlignmentConfig` (default: the
+    standard FLASH-BS serving profile); its `constraint` field is replaced.
+    Returns the same ``align(emissions, lengths=None)`` callable as
+    `make_alignment_head`, with ``align.decoder`` / ``align.constraint``
+    attached for introspection.
+    """
+    constraint = LexiconConstraint(words, self_loops=self_loops,
+                                   loop_words=loop_words)
+    spec = as_decode_spec(AlignmentConfig() if cfg is None else cfg)
+    spec = with_constraint(spec, constraint)
+    align = make_alignment_head(hmm_log_pi, hmm_log_A, spec,
+                                mesh=mesh, data_axis=data_axis)
+    align.constraint = constraint
+    return align
+
+
 def make_e2e_align_step(model, params_treedef_hint, hmm: HMM,
                         cfg, num_classes: int):
     """Encoder forward + log-softmax emissions + Viterbi alignment, one jit.
@@ -101,4 +131,5 @@ def make_e2e_align_step(model, params_treedef_hint, hmm: HMM,
     return step
 
 
-__all__ = ["AlignmentConfig", "make_alignment_head", "make_e2e_align_step"]
+__all__ = ["AlignmentConfig", "make_alignment_head",
+           "make_lexicon_align_head", "make_e2e_align_step"]

@@ -99,6 +99,7 @@ def _mask_slot(delta, slot, keep):
     """Suppress one slot's frontier hypotheses inconsistent with a forced
     commit (same -inf accumulation as `OnlineViterbiDecoder`)."""
     row = jax.lax.dynamic_index_in_dim(delta, slot, keepdims=False)
+    # flashlint: disable=FL007(slot forced-commit suppression, mirrors OnlineViterbiDecoder's annotated seam)
     row = jnp.where(keep, row, row + 4.0 * NEG_INF)
     return jax.lax.dynamic_update_index_in_dim(delta, row, slot, 0)
 

@@ -114,6 +114,41 @@ def test_fl006_allowed_in_kernels_tests_and_with_reason():
     assert codes("spec = mylib.BlockSpec((8, 128))\n", COLD) == []
 
 
+def test_fl007_manual_neg_inf_masking_flagged():
+    fixtures = [
+        "import jax.numpy as jnp\ny = jnp.where(mask, x, NEG_INF)\n",
+        "import jax.numpy as jnp\ny = jnp.where(keep, d, d + 4.0 * NEG_INF)\n",
+        "import jax.numpy as jnp\ny = jnp.where(mask, x, -jnp.inf)\n",
+        "import jax.numpy as jnp\ny = jnp.where(mask, x, float('-inf'))\n",
+        "import jax.numpy as jnp\ny = jnp.where(mask, x, -1.0e9)\n",
+        "import numpy as np\ny = np.where(mask, x, -np.inf)\n",
+    ]
+    for src in fixtures:
+        assert codes(src, COLD) == ["FL007"], src
+
+
+def test_fl007_exempt_in_constraints_kernels_and_tests():
+    src = "import jax.numpy as jnp\ny = jnp.where(mask, x, NEG_INF)\n"
+    assert codes(src, "src/repro/core/constraints.py") == []
+    assert codes(src, "src/repro/kernels/ops.py") == []
+    assert codes(src, "tests/test_constraints.py") == []
+    assert codes(src + "  # ok", COLD) == ["FL007"]   # COLD is not exempt
+    assert codes("import jax.numpy as jnp\n"
+                 "# flashlint: disable=FL007(sentinel padding seam)\n"
+                 "y = jnp.where(mask, x, NEG_INF)\n", COLD) == []
+
+
+def test_fl007_benign_wheres_not_flagged():
+    # no neg-inf constant anywhere in the arguments: not a mask
+    assert codes("import jax.numpy as jnp\n"
+                 "y = jnp.where(mask, x, 0.0)\n", COLD) == []
+    assert codes("import jax.numpy as jnp\n"
+                 "y = jnp.where(is_pad, delta, new)\n", COLD) == []
+    # small negative literals are scores, not sentinels
+    assert codes("import jax.numpy as jnp\n"
+                 "y = jnp.where(mask, x, -30.0)\n", COLD) == []
+
+
 # ---------------------------------------------------------------------------
 # Disable grammar
 # ---------------------------------------------------------------------------

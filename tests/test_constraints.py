@@ -1,0 +1,393 @@
+"""Constrained decoding: the PR-10 bit-identity and eager-infeasibility pins.
+
+The contract under test (`core/constraints.py` docstring): a constrained
+decode is **bit-identical** to the same method decoding the
+`constrain_inputs`-masked inputs, for every method and every execution shape
+(single sequence, ragged batch, sharded batch, streaming) — because every
+consumer applies the same {0, NEG_INF} float adds to the same operands.
+Exact methods are additionally pinned bitwise against the dense
+`viterbi_vanilla` oracle over the masked inputs (`assoc` keeps its known
+reassociation-level float divergence and is pinned to allclose + equal
+paths).  Infeasible constraints raise `ValueError` eagerly — at construction
+or compile — never NaN at decode time.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    BATCH_METHODS, METHODS, SPEC_BY_METHOD,
+    BandConstraint, ConstraintSpec, FlashBSSpec, FlashSpec, FusedSpec,
+    LexiconConstraint, OnlineBeamSpec, OnlineSpec, ScheduleConstraint,
+    TransitionMaskConstraint, VanillaSpec, ViterbiDecoder,
+    banded_state_bytes, constrain_inputs, erdos_renyi_hmm, plan,
+    random_emissions, spec_from_tunables, spec_state_bytes, viterbi_decode,
+    with_constraint,
+)
+from repro.core.constraints import (compiled_penalties, step_penalty,
+                                    step_penalty_rows)
+from repro.core.vanilla import viterbi_vanilla
+from repro.runtime.jaxcompat import make_mesh
+
+K, T = 12, 24
+#: methods whose decode is exact (same best path/score as vanilla); `assoc`
+#: is exact too but reassociates the max-plus reduction, so its *score*
+#: differs from vanilla at float-rounding level even unconstrained.
+EXACT_BITWISE = ("vanilla", "checkpoint", "flash", "fused", "online")
+
+
+@pytest.fixture(scope="module")
+def problem():
+    key = jax.random.key(10)
+    k1, k2 = jax.random.split(key)
+    # edge_prob=1.0: dense log_A (every transition finite), the regime the
+    # banded fused path's bit-identity contract requires
+    hmm = erdos_renyi_hmm(k1, K, edge_prob=1.0)
+    em = random_emissions(k2, T, K)
+    return hmm, em
+
+
+def _constraints() -> dict[str, ConstraintSpec]:
+    chain = [(i, (i + 1) % K) for i in range(K)]
+    loops = [(i, i) for i in range(K)]
+    return {
+        "band": BandConstraint(centers=tuple((3 * t) % K for t in range(T)),
+                               width=3),
+        "short_band": BandConstraint(centers=tuple(range(T // 2)), width=4),
+        "lexicon": LexiconConstraint((((0, 1, 2), (0, 3, 2)), ((4, 5, 6),),
+                                      ((7, 8),))),
+        "transition": TransitionMaskConstraint(
+            edges=tuple(chain + loops), init_states=(0, 1, 2)),
+        "schedule": ScheduleConstraint(
+            anchors=((0, (0, 1, 2, 3)), (5, (2, 3, 4)), (T - 1, (3, 4, 5)))),
+    }
+
+
+CONSTRAINTS = _constraints()
+
+
+def _bitwise(a, b):
+    pa, sa = a
+    pb, sb = b
+    return bool(jnp.all(jnp.asarray(pa) == jnp.asarray(pb))) \
+        and float(sa) == float(sb)
+
+
+# ---------------------------------------------------------------------------
+# Construction / API surface
+# ---------------------------------------------------------------------------
+
+def test_constraints_hashable_and_replaceable():
+    for c in CONSTRAINTS.values():
+        assert hash(c) == hash(dataclasses.replace(c))
+    band = CONSTRAINTS["band"]
+    spec = with_constraint(FlashSpec(), band)
+    assert spec.constraint == band and FlashSpec().constraint is None
+    assert with_constraint(spec, None).constraint is None
+    assert hash(spec) == hash(FlashSpec(constraint=band))
+
+
+def test_spec_rejects_non_constraint():
+    with pytest.raises(TypeError, match="ConstraintSpec"):
+        VanillaSpec(constraint=42)
+
+
+def test_legacy_surfaces_reject_constraint(problem):
+    hmm, em = problem
+    with pytest.raises(TypeError, match="constraint"):
+        spec_from_tunables("vanilla",
+                           {"constraint": CONSTRAINTS["band"]})
+    with pytest.raises(TypeError, match="constraint"):
+        viterbi_decode(em, hmm.log_pi, hmm.log_A, method="vanilla",
+                       constraint=CONSTRAINTS["band"])
+
+
+def test_penalties_are_tropical_identities(problem):
+    for c in CONSTRAINTS.values():
+        t_pen, pi_pen, s_pen = compiled_penalties(c, K, T)
+        for pen in (t_pen, pi_pen, s_pen):
+            if pen is not None:
+                assert pen.dtype == np.float32
+                assert set(np.unique(pen)) <= {np.float32(0.0),
+                                               np.float32(-1.0e9)}
+        # streaming rows are the same bits, same None-ness
+        rows = step_penalty_rows(c, K, 0, T)
+        if s_pen is None:
+            assert rows is None
+        else:
+            np.testing.assert_array_equal(rows, s_pen)
+    # beyond-horizon rows are zeros (unconstrained) for horizon constraints;
+    # a lexicon's reachability schedule has no horizon and stays masked
+    for cname in ("band", "short_band", "schedule"):
+        tail = step_penalty_rows(CONSTRAINTS[cname], K, 10 * T, 3)
+        assert not tail.any()
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity: every method, against itself-over-masked-inputs and (exact
+# methods) against the dense vanilla oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cname", sorted(CONSTRAINTS))
+@pytest.mark.parametrize("method", METHODS)
+def test_constrained_bit_identical_to_masked(problem, method, cname):
+    hmm, em = problem
+    c = CONSTRAINTS[cname]
+    spec = SPEC_BY_METHOD[method]()
+    masked = constrain_inputs(c, hmm.log_pi, hmm.log_A, em)
+    got = with_constraint(spec, c).run(hmm.log_pi, hmm.log_A, em)
+    want = spec.run(*masked)
+    assert _bitwise(got, want), (method, cname)
+
+    if method in EXACT_BITWISE:
+        assert _bitwise(got, viterbi_vanilla(*masked)), (method, cname)
+    elif method == "assoc":
+        p_o, s_o = viterbi_vanilla(*masked)
+        assert bool(jnp.all(got[0] == p_o))
+        np.testing.assert_allclose(float(got[1]), float(s_o), rtol=1e-5)
+    assert np.isfinite(float(got[1]))       # infeasibility never leaks as NaN
+
+
+def test_fused_banded_path_runs_windowed(problem):
+    """The covering band decodes via the sliding window, still bit-identical."""
+    hmm, em = problem
+    band = CONSTRAINTS["band"]
+    got = FusedSpec(constraint=band).run(hmm.log_pi, hmm.log_A, em)
+    want = viterbi_vanilla(*constrain_inputs(band, hmm.log_pi, hmm.log_A, em))
+    assert _bitwise(got, want)
+    # every decoded state is inside the band the window was built from
+    centers = np.asarray(band.centers)[:T]
+    assert (np.abs(np.asarray(got[0]) - np.clip(centers, 0, K - 1))
+            <= band.width).all()
+
+
+def test_masked_pallas_kernel_lane_aligned():
+    """K=128 hits the Pallas masked kernel (interpret off-TPU), not the ref."""
+    Kb, Tb = 128, 16
+    key = jax.random.key(3)
+    k1, k2 = jax.random.split(key)
+    hmm = erdos_renyi_hmm(k1, Kb, edge_prob=1.0)
+    em = random_emissions(k2, Tb, Kb)
+    lex = LexiconConstraint((((0, 1, 2),), ((40, 41),), ((100, 101, 102),)))
+    got = FusedSpec(constraint=lex).run(hmm.log_pi, hmm.log_A, em)
+    want = viterbi_vanilla(*constrain_inputs(lex, hmm.log_pi, hmm.log_A, em))
+    assert _bitwise(got, want)
+
+
+# ---------------------------------------------------------------------------
+# Batched (ragged), sharded, streaming
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cname", ("band", "lexicon", "schedule"))
+@pytest.mark.parametrize("method", BATCH_METHODS)
+def test_batched_ragged_bit_identical(problem, method, cname):
+    hmm, em_one = problem
+    c = CONSTRAINTS[cname]
+    B = 4
+    key = jax.random.key(17)
+    em = random_emissions(key, B * T, K).reshape(B, T, K)
+    lengths = jnp.asarray([T, T - 5, 7, 1])
+    spec = SPEC_BY_METHOD[method]()
+    dec_c = ViterbiDecoder(with_constraint(spec, c), hmm.log_pi, hmm.log_A)
+    paths, scores = dec_c.decode_batch(em, lengths)
+    mlp, mla, mem = constrain_inputs(c, hmm.log_pi, hmm.log_A, em)
+    dec_m = ViterbiDecoder(spec, mlp, mla)
+    p_want, s_want = dec_m.decode_batch(mem, lengths)
+    assert bool(jnp.all(paths == p_want)), (method, cname)
+    assert bool(jnp.all(scores == s_want)), (method, cname)
+
+
+def test_sharded_bit_identical(problem):
+    hmm, _ = problem
+    c = CONSTRAINTS["lexicon"]
+    B = 3                                   # does not divide the axis: pads
+    key = jax.random.key(23)
+    em = random_emissions(key, B * T, K).reshape(B, T, K)
+    lengths = jnp.asarray([T, 13, 6])
+    mesh = make_mesh((1,), ("data",))
+    dec = ViterbiDecoder(FusedSpec(constraint=c), hmm.log_pi, hmm.log_A)
+    p_sh, s_sh = dec.decode_sharded(em, lengths, mesh=mesh)
+    p_b, s_b = dec.decode_batch(em, lengths)
+    assert bool(jnp.all(p_sh == p_b)) and bool(jnp.all(s_sh == s_b))
+
+
+@pytest.mark.parametrize("cname", ("band", "lexicon", "transition",
+                                   "schedule"))
+@pytest.mark.parametrize("spec_cls", (OnlineSpec, OnlineBeamSpec))
+def test_streaming_bit_identical(problem, spec_cls, cname):
+    hmm, em = problem
+    c = CONSTRAINTS[cname]
+    spec = (spec_cls(constraint=c) if spec_cls is OnlineSpec
+            else spec_cls(beam_width=K, constraint=c))
+    stream = ViterbiDecoder(spec, hmm.log_pi, hmm.log_A).make_streaming()
+    for t0 in range(0, T, 7):               # ragged chunks
+        stream.feed(em[t0:t0 + 7])
+    _, score = stream.flush()
+    base = dataclasses.replace(spec, constraint=None)
+    p_want, s_want = base.run(*constrain_inputs(c, hmm.log_pi, hmm.log_A, em))
+    assert bool(jnp.all(jnp.asarray(stream.path) == p_want)), cname
+    assert float(score) == float(s_want), cname
+
+
+# ---------------------------------------------------------------------------
+# Eager infeasibility: ValueError at construction or compile, never NaN
+# ---------------------------------------------------------------------------
+
+def test_empty_anchor_raises_at_construction():
+    with pytest.raises(ValueError, match="empty state set"):
+        ScheduleConstraint(anchors=((0, ()),))
+    with pytest.raises(ValueError, match="non-empty"):
+        ScheduleConstraint(anchors=())
+    with pytest.raises(ValueError, match="duplicate"):
+        ScheduleConstraint(anchors=((2, (1,)), (2, (3,))))
+
+
+def test_dead_end_transition_mask_raises_at_compile(problem):
+    hmm, em = problem
+    # 0 -> 1 is the only arc and 1 has no outgoing arcs: dead end at step 2
+    dead = TransitionMaskConstraint(edges=((0, 1),), init_states=(0,))
+    with pytest.raises(ValueError, match="infeasible"):
+        compiled_penalties(dead, K, T)
+    with pytest.raises(ValueError, match="infeasible"):
+        ViterbiDecoder(FlashSpec(constraint=dead),
+                       hmm.log_pi, hmm.log_A).decode(em)
+
+
+def test_lexicon_without_loops_dies_after_word_end():
+    # a single 1-state word with no self-loops and no word loops has no
+    # outgoing arcs at all: infeasible for any T > 1
+    lone = LexiconConstraint((((5,),),), self_loops=False, loop_words=False)
+    with pytest.raises(ValueError, match="infeasible"):
+        step_penalty(lone, K, T)
+    looped = LexiconConstraint((((5,),),), self_loops=False, loop_words=True)
+    assert step_penalty(looped, K, T) is not None
+
+
+def test_out_of_range_states_raise_at_compile():
+    with pytest.raises(ValueError, match="out of range"):
+        compiled_penalties(
+            ScheduleConstraint(anchors=((0, (K + 3,)),)), K, T)
+    with pytest.raises(ValueError, match="out of range"):
+        compiled_penalties(
+            TransitionMaskConstraint(edges=((0, K),)), K, T)
+    with pytest.raises(ValueError, match="out of range"):
+        compiled_penalties(LexiconConstraint((((K, K + 1),),)), K, T)
+
+
+# ---------------------------------------------------------------------------
+# Planner: masks are costed, tight bands keep exact decoding on the ladder
+# ---------------------------------------------------------------------------
+
+def test_spec_state_bytes_charges_masks():
+    lex = CONSTRAINTS["lexicon"]
+    base = spec_state_bytes(VanillaSpec(), K, T)
+    assert spec_state_bytes(VanillaSpec(constraint=lex), K, T) \
+        == base + lex.mask_bytes(K, T)
+    band = CONSTRAINTS["band"]
+    assert spec_state_bytes(FusedSpec(constraint=band), K, T) \
+        == banded_state_bytes(K, T, band.width)
+    # a band that does not cover the horizon is charged like any mask
+    short = CONSTRAINTS["short_band"]
+    assert spec_state_bytes(FusedSpec(constraint=short), K, T) \
+        == spec_state_bytes(FusedSpec(), K, T) + short.mask_bytes(K, T)
+
+
+def test_planner_banded_rung_keeps_exact_alive():
+    Kp, Tp = 256, 64
+    band = BandConstraint(centers=tuple(range(Tp)), width=8)
+    budget = banded_state_bytes(Kp, Tp, band.width) + 512
+    constrained = plan(Kp, Tp, budget=budget, constraint=band)
+    assert constrained.spec == FusedSpec(constraint=band)
+    assert "banded" in constrained.why
+    # the same budget under a band that does NOT cover the horizon: every
+    # rung pays the T*K mask bytes, no banded rung applies, and the ladder
+    # falls all the way to the floor — the covering band is what kept exact
+    # decoding alive
+    short = BandConstraint(centers=tuple(range(Tp // 2)), width=8)
+    degraded = plan(Kp, Tp, budget=budget, constraint=short)
+    assert isinstance(degraded.spec, FlashBSSpec)
+    assert degraded.spec.constraint == short
+    # every rung carries the constraint
+    loose = plan(Kp, Tp, constraint=band)
+    assert loose.spec.constraint == band
+
+
+def test_planner_unconstrained_unchanged():
+    assert plan(256, 64).spec == plan(256, 64, constraint=None).spec
+
+
+# ---------------------------------------------------------------------------
+# Randomised sweeps (always run) + hypothesis property tests (skip when the
+# container lacks hypothesis)
+# ---------------------------------------------------------------------------
+
+def _random_band(rng, horizon):
+    centers = tuple(int(c) for c in rng.integers(0, K, size=horizon))
+    return BandConstraint(centers=centers, width=int(rng.integers(1, K)))
+
+
+def _random_trie(rng):
+    words, pool = [], rng.permutation(K)
+    i = 0
+    for _ in range(int(rng.integers(1, 4))):
+        n = int(rng.integers(1, 4))
+        words.append((tuple(int(s) for s in pool[i:i + n]),))
+        i += n
+    return LexiconConstraint(tuple(words))
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_random_band_and_trie_masks_bitwise(problem, seed):
+    hmm, em = problem
+    rng = np.random.default_rng(seed)
+    for c in (_random_band(rng, T), _random_band(rng, T // 3),
+              _random_trie(rng)):
+        masked = constrain_inputs(c, hmm.log_pi, hmm.log_A, em)
+        got = VanillaSpec(constraint=c).run(hmm.log_pi, hmm.log_A, em)
+        assert _bitwise(got, viterbi_vanilla(*masked)), c
+        got_f = FusedSpec(constraint=c).run(hmm.log_pi, hmm.log_A, em)
+        assert _bitwise(got_f, viterbi_vanilla(*masked)), c
+
+
+def test_hypothesis_band_property(problem):
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    hmm, em = problem
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(
+        centers=st.lists(st.integers(0, K - 1), min_size=1, max_size=T),
+        width=st.integers(0, K))
+    def check(centers, width):
+        c = BandConstraint(centers=tuple(centers), width=width)
+        try:
+            masked = constrain_inputs(c, hmm.log_pi, hmm.log_A, em)
+        except ValueError:
+            return                          # infeasible: eager raise is fine
+        got = VanillaSpec(constraint=c).run(hmm.log_pi, hmm.log_A, em)
+        assert _bitwise(got, viterbi_vanilla(*masked))
+
+    check()
+
+
+def test_hypothesis_trie_property(problem):
+    hypothesis = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    hmm, em = problem
+
+    @hypothesis.settings(max_examples=20, deadline=None)
+    @hypothesis.given(st.lists(
+        st.lists(st.integers(0, K - 1), min_size=1, max_size=4,
+                 unique=True).map(tuple),
+        min_size=1, max_size=3))
+    def check(prons):
+        c = LexiconConstraint(tuple((p,) for p in prons))
+        masked = constrain_inputs(c, hmm.log_pi, hmm.log_A, em)
+        got = VanillaSpec(constraint=c).run(hmm.log_pi, hmm.log_A, em)
+        assert _bitwise(got, viterbi_vanilla(*masked))
+
+    check()
